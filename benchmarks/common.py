@@ -1,0 +1,42 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import csv
+import json
+import os
+import time
+from pathlib import Path
+from typing import Dict, Iterable, List
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def out_dir(name: str) -> Path:
+    p = RESULTS / name
+    p.mkdir(parents=True, exist_ok=True)
+    return p
+
+
+def write_rows(name: str, rows: List[Dict], fname: str = "data.csv") -> Path:
+    p = out_dir(name) / fname
+    if rows:
+        with open(p, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    return p
+
+
+def write_json(name: str, obj, fname: str = "data.json") -> Path:
+    p = out_dir(name) / fname
+    p.write_text(json.dumps(obj, indent=1, default=float))
+    return p
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

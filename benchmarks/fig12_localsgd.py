@@ -1,0 +1,31 @@
+"""Figure 12: DropCompute on top of Local-SGD in straggler environments."""
+from __future__ import annotations
+
+from repro.core.local_sgd import StragglerScenario, localsgd_speedup
+
+from .common import write_rows
+
+
+def run(quick: bool = True):
+    iters = 200 if quick else 1000
+    rows = []
+    for mode in ("uniform", "single_server"):
+        sc = StragglerScenario(mode=mode, p=0.04 if mode == "uniform" else 0.3,
+                               delay=1.0, base=0.1, server_size=4)
+        for h in (1, 2, 4, 8, 16):
+            s_plain, _ = localsgd_speedup(sc, 32, h, iters=iters)
+            tau = h * 0.1 * 1.6
+            s_drop, drop = localsgd_speedup(sc, 32, h, tau=tau, iters=iters)
+            rows.append({"scenario": mode, "sync_period": h,
+                         "localsgd_speedup": s_plain,
+                         "with_dropcompute": s_drop, "drop_rate": drop})
+    write_rows("fig12_localsgd", rows)
+
+    u8 = [r for r in rows if r["scenario"] == "uniform" and r["sync_period"] == 8][0]
+    s8 = [r for r in rows if r["scenario"] == "single_server" and r["sync_period"] == 8][0]
+    return [
+        {"name": "fig12/uniform_h8_localsgd", "value": round(u8["localsgd_speedup"], 3)},
+        {"name": "fig12/uniform_h8_dropcompute", "value": round(u8["with_dropcompute"], 3)},
+        {"name": "fig12/single_server_h8_localsgd", "value": round(s8["localsgd_speedup"], 3)},
+        {"name": "fig12/single_server_h8_dropcompute", "value": round(s8["with_dropcompute"], 3)},
+    ]

@@ -1,0 +1,62 @@
+"""Figure 1: scalability of synchronous training under compute variance.
+
+Simulated measurement up to 200 workers + analytic extrapolation (eq. 11)
+to 2048, baseline vs DropCompute with the auto-selected threshold, in the
+paper's simulated-delay environment (12 accumulations, lognormal noise).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PAPER_DELAY, optimal_tau, scale_curve, simulate
+from repro.core.theory import effective_speedup, expected_max_normal
+from repro.core.threshold import select_threshold
+
+from .common import write_rows
+
+M = 12
+TC = 0.5
+
+
+def run(quick: bool = True):
+    workers_meas = [1, 2, 4, 8, 16, 32, 64, 128, 200]
+    workers_extra = [256, 512, 1024, 2048]
+    iters = 100 if quick else 400
+    rows = []
+
+    # threshold from a profiling run at 64 workers (Algorithm 2)
+    prof = simulate(PAPER_DELAY, 50, 64, M, tc=TC, seed=7)
+    tau = select_threshold(prof.t, prof.tc).tau
+
+    base = scale_curve(PAPER_DELAY, workers_meas, M, TC, iters=iters)
+    drop = scale_curve(PAPER_DELAY, workers_meas, M, TC, iters=iters, tau=tau)
+    for n in workers_meas:
+        rows.append({
+            "workers": n, "source": "simulated",
+            "throughput_baseline": base[n][0], "efficiency_baseline": base[n][1],
+            "throughput_dropcompute": drop[n][0], "efficiency_dropcompute": drop[n][1],
+            "speedup": drop[n][0] / base[n][0],
+        })
+
+    # analytic extrapolation (eq. 11 with the paper-lognormal mu/sigma)
+    mu, sig = PAPER_DELAY.mean, PAPER_DELAY.std
+    for n in workers_meas + workers_extra:
+        e_t = expected_max_normal(M * mu, np.sqrt(M) * sig, n)
+        s = effective_speedup(tau, mu, sig, M, n, TC)
+        thr_base = n * M / (e_t + TC)
+        rows.append({
+            "workers": n, "source": "analytic",
+            "throughput_baseline": thr_base, "efficiency_baseline": thr_base / (n * M / (M * mu + TC)),
+            "throughput_dropcompute": thr_base * s, "efficiency_dropcompute": s * thr_base / (n * M / (M * mu + TC)),
+            "speedup": s,
+        })
+
+    write_rows("fig1_scale", rows)
+
+    meas200 = [r for r in rows if r["source"] == "simulated" and r["workers"] == 200][0]
+    ana2048 = [r for r in rows if r["source"] == "analytic" and r["workers"] == 2048][0]
+    return [
+        {"name": "fig1/speedup@200workers", "value": round(meas200["speedup"], 4)},
+        {"name": "fig1/speedup@2048workers_analytic", "value": round(ana2048["speedup"], 4)},
+        {"name": "fig1/efficiency_baseline@200", "value": round(meas200["efficiency_baseline"], 4)},
+    ]

@@ -1,0 +1,65 @@
+"""Figure 3: S_eff(tau) — simulation vs analytic vs analytic-given-E[T].
+
+(a) normal micro-batch latency: all three curves agree;
+(b) paper-lognormal latency: the pure-Gaussian analytic drifts, plugging
+    the empirical E[T] fixes it (appendix C.2's point);
+(c) the optimal threshold trade-off (completion rate vs step speedup).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import LatencyModel, NoiseModel, effective_speedup, simulate
+from repro.core.threshold import select_threshold
+
+from .common import write_rows
+
+M = 12
+N = 64
+TC = 0.5
+
+
+def _curves(model, iters, tag):
+    sim = simulate(model, iters, N, M, tc=TC, seed=1)
+    mu, sig = model.mean, model.std
+    e_t_emp = float(sim.T.mean())
+    grid = np.linspace(M * mu * 0.7, float(sim.T.max()) * 1.02, 60)
+    rows = []
+    for tau in grid:
+        t_iter, frac = sim.with_threshold(tau)
+        rows.append({
+            "panel": tag, "tau": float(tau),
+            "simulation": sim.effective_speedup(tau),
+            "analytic": effective_speedup(tau, mu, sig, M, N, TC),
+            "analytic_given_ET": effective_speedup(tau, mu, sig, M, N, TC, e_t=e_t_emp),
+            "completion": float(frac.mean()),
+            "step_speedup": float(((sim.T + TC) / t_iter).mean()),
+        })
+    return rows, sim
+
+
+def run(quick: bool = True):
+    iters = 100 if quick else 400
+    rows_a, _ = _curves(
+        LatencyModel(base=0.45, noise=NoiseModel(kind="normal", mean=0.5, var=0.05)),
+        iters, "a_normal",
+    )
+    rows_b, sim_b = _curves(
+        LatencyModel(base=0.45, noise=NoiseModel(kind="paper_lognormal")), iters, "b_lognormal"
+    )
+    write_rows("fig3_seff", rows_a + rows_b)
+
+    # panel (c): automatic tau*
+    res = select_threshold(sim_b.t, TC)
+
+    # agreement metrics: max |analytic - simulation| over the curve
+    def max_err(rows, key):
+        return max(abs(r[key] - r["simulation"]) for r in rows)
+
+    return [
+        {"name": "fig3a/max_err_analytic_vs_sim", "value": round(max_err(rows_a, "analytic"), 4)},
+        {"name": "fig3b/max_err_analytic_vs_sim", "value": round(max_err(rows_b, "analytic"), 4)},
+        {"name": "fig3b/max_err_givenET_vs_sim", "value": round(max_err(rows_b, "analytic_given_ET"), 4)},
+        {"name": "fig3c/tau_star", "value": round(res.tau, 4)},
+        {"name": "fig3c/seff_at_tau_star", "value": round(res.speedup, 4)},
+    ]

@@ -1,0 +1,52 @@
+"""Figure 4: effective speedup vs drop rate.
+
+Left: 32 accumulations, varying workers (16..112): the benefit grows with
+scale.  Right: 112 workers, varying accumulations — diminishing returns
+with more accumulations.  Post-analysis of no-drop runs, as in the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PAPER_DELAY, simulate
+
+from .common import write_rows
+
+
+def _speedup_vs_droprate(sim, n_points=25):
+    grid = np.linspace(float(sim.T_n.mean()) * 0.55, float(sim.T.max()), 200)
+    out = []
+    for tau in grid:
+        t_iter, frac = sim.with_threshold(tau)
+        out.append((1.0 - float(frac.mean()), sim.effective_speedup(tau)))
+    out.sort()
+    return out
+
+
+def run(quick: bool = True):
+    iters = 80 if quick else 300
+    rows = []
+    for n in (16, 32, 64, 112):
+        sim = simulate(PAPER_DELAY, iters, n, 32, tc=0.5, seed=n)
+        for dr, s in _speedup_vs_droprate(sim):
+            rows.append({"panel": "left", "workers": n, "accumulations": 32,
+                         "drop_rate": dr, "speedup": s})
+    for m in (4, 12, 32, 64):
+        sim = simulate(PAPER_DELAY, iters, 112, m, tc=0.5, seed=1000 + m)
+        for dr, s in _speedup_vs_droprate(sim):
+            rows.append({"panel": "right", "workers": 112, "accumulations": m,
+                         "drop_rate": dr, "speedup": s})
+    write_rows("fig4_droprate", rows)
+
+    def best(panel, key, val):
+        return max(
+            (r["speedup"] for r in rows if r["panel"] == panel and r[key] == val and r["drop_rate"] < 0.12),
+            default=1.0,
+        )
+
+    return [
+        {"name": "fig4/best_speedup_16w", "value": round(best("left", "workers", 16), 4)},
+        {"name": "fig4/best_speedup_112w", "value": round(best("left", "workers", 112), 4)},
+        {"name": "fig4/best_speedup_m4", "value": round(best("right", "accumulations", 4), 4)},
+        {"name": "fig4/best_speedup_m64", "value": round(best("right", "accumulations", 64), 4)},
+    ]

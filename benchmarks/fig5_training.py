@@ -1,0 +1,58 @@
+"""Figure 5: loss-vs-steps and loss-vs-time with compute variance.
+
+Actual training of a small LM with 64 virtual workers in the simulated
+delay environment: DropCompute may need a few more steps to a target loss
+but reaches it in less simulated wall-clock.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DropConfig, PAPER_DELAY
+from repro.data import DataConfig
+from repro.models import ModelConfig
+from repro.train import TrainConfig, train
+
+from .common import write_rows
+
+MODEL = ModelConfig(
+    name="fig5", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=251, dtype="float32", remat=False,
+)
+DATA = DataConfig(vocab_size=251, seq_len=64, batch_size=64, strategy="pack", seed=0)
+
+
+def run(quick: bool = True):
+    steps = 40 if quick else 150
+    n_workers = 8 if quick else 64
+
+    def go(drop):
+        t = TrainConfig(
+            steps=steps, n_workers=n_workers, microbatches=8, lr=1e-3,
+            drop=drop, latency=PAPER_DELAY, tc=0.5,
+            auto_threshold=drop.enabled, calibration_steps=10, seed=0,
+        )
+        return train(MODEL, DATA, t)
+
+    base = go(DropConfig(enabled=False))
+    drop = go(DropConfig(enabled=True, tau=float("inf")))
+
+    rows = []
+    for i in range(steps):
+        rows.append({"method": "baseline", "step": i, "loss": base.losses[i],
+                     "time": float(base.cum_time[i])})
+        rows.append({"method": "dropcompute", "step": i, "loss": drop.losses[i],
+                     "time": float(drop.cum_time[i])})
+    write_rows("fig5_training", rows)
+
+    # time to reach the baseline's final loss
+    target = base.losses[-1]
+    t_base = float(base.cum_time[-1])
+    idx = next((i for i, l in enumerate(drop.losses) if l <= target), steps - 1)
+    t_drop = float(drop.cum_time[idx])
+    return [
+        {"name": "fig5/time_saving_to_target", "value": round(1 - t_drop / t_base, 4)},
+        {"name": "fig5/extra_steps_to_target", "value": int(idx - (steps - 1))},
+        {"name": "fig5/mean_drop_rate", "value": round(float(np.mean(drop.drop_fractions)), 4)},
+        {"name": "fig5/tau_star", "value": round(drop.tau, 4)},
+    ]

@@ -1,0 +1,118 @@
+"""Roofline analysis from the multi-pod dry-run artifacts (deliverable g).
+
+For each (arch x shape x mesh) JSON produced by ``repro.launch.dryrun``:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s      [s]
+    memory term     = HLO_bytes_per_device / HBM_bw           [s]
+    collective term = collective_bytes_per_device / link_bw   [s]
+
+(the walker's numbers are per-device, so the /chips in the spec formulas
+is already applied).  Also reports MODEL_FLOPS = 6*N*D (train; 2*N*D
+prefill / 2*N_active*B decode) vs HLO_FLOPs, the dominant term, and a
+one-line diagnosis.  Emits CSV + a markdown table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from .common import RESULTS, write_rows
+
+DRYRUN = RESULTS / "dryrun"
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+
+def model_flops_per_device(rec: Dict) -> float:
+    n_active = rec["active_param_count"]
+    chips = rec["n_chips"]
+    shape = rec["shape"]
+    if rec["mode"] == "train":
+        tokens = {"train_4k": 256 * 4096}[shape]
+        return 6.0 * n_active * tokens / chips
+    if rec["mode"] == "prefill":
+        tokens = {"prefill_32k": 32 * 32768}[shape]
+        return 2.0 * n_active * tokens / chips
+    tokens = {"decode_32k": 128, "long_500k": 1}[shape]
+    return 2.0 * n_active * tokens / chips
+
+
+def analyze_record(rec: Dict) -> Dict:
+    w = rec["walked"]
+    comp = w["flops"] / PEAK
+    mem = w["bytes"] / HBM
+    # prefer the TPU-native collective estimate (CPU float-normalization
+    # compiles all collectives as f32) when the walker recorded one
+    coll = w.get("collective_bytes_tpu", w["collective_bytes"]) / LINK
+    terms = {"compute": comp, "memory": mem, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    useful = mf / max(w["flops"], 1.0)
+
+    hints = {
+        "compute": "increase arithmetic intensity (larger tiles / fuse pointwise chains into the matmuls)",
+        "memory": "cut HBM traffic: lower-precision residuals/weights at use, fuse reads, larger microbatches",
+        "collective": "reduce FSDP regathering (bf16 gathers, fewer/larger microbatches) or overlap collectives with compute",
+    }
+    step_time = max(terms.values())
+    mfu = mf / PEAK / step_time if step_time > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops": w["flops"],
+        "useful_ratio": useful,
+        "roofline_mfu": mfu,
+        "mem_gib_per_dev": (rec["memory"]["temp_bytes"] + rec["memory"]["argument_bytes"]) / 2**30,
+        "hint": hints[dominant],
+    }
+
+
+def load_records(tag: str = "") -> List[Dict]:
+    recs = []
+    for p in sorted(DRYRUN.glob(f"*{tag}.json")):
+        if tag == "" and "__" in p.stem:
+            continue  # skip perf-iteration tagged variants in the base table
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | dominant "
+           "| useful (6ND/HLO) | roofline-MFU | mem GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_mfu']:.3f} | {r['mem_gib_per_dev']:.1f} |\n"
+        )
+    return hdr + body
+
+
+def run(quick: bool = True):
+    recs = load_records()
+    if not recs:
+        return [{"name": "roofline/records", "value": 0}]
+    rows = [analyze_record(r) for r in recs]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    write_rows("roofline", rows)
+    (RESULTS / "roofline" / "table.md").write_text(markdown_table(rows))
+
+    single = [r for r in rows if r["mesh"] == "16x16"]
+    by_dom = {}
+    for r in single:
+        by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+    worst = min(single, key=lambda r: r["roofline_mfu"]) if single else None
+    out = [
+        {"name": "roofline/records", "value": len(rows)},
+        {"name": "roofline/dominant_counts", "value": json.dumps(by_dom)},
+    ]
+    if worst:
+        out.append({"name": "roofline/worst_mfu_pair",
+                    "value": f"{worst['arch']}x{worst['shape']}={worst['roofline_mfu']:.4f}"})
+    return out

@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = module wall time in
+microseconds / number of derived metrics; derived = the metric value).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig1,...]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig1_scale",
+    "fig2_variance",
+    "fig3_seff",
+    "fig4_droprate",
+    "fig5_training",
+    "table1_generalization",
+    "fig12_localsgd",
+    "fig13_noise",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="long (paper-scale) settings")
+    ap.add_argument("--only", default="", help="comma-separated module filter")
+    args = ap.parse_args()
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        try:
+            derived = mod.run(quick=not args.full)
+        except Exception as e:  # keep the harness going, report at the end
+            failed.append((name, repr(e)))
+            traceback.print_exc(limit=3, file=sys.stderr)
+            continue
+        us = (time.perf_counter() - t0) * 1e6
+        per = us / max(len(derived), 1)
+        for d in derived:
+            print(f"{d['name']},{per:.0f},{d['value']}")
+        sys.stdout.flush()
+
+    if failed:
+        print("FAILED:", failed, file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

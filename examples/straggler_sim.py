@@ -1,0 +1,57 @@
+"""Cluster-scale what-if analysis: is DropCompute worth it on YOUR cluster?
+
+    PYTHONPATH=src python examples/straggler_sim.py --workers 256 --noise lognormal
+
+Feeds a latency model (or swap in real measured micro-batch times) through
+Algorithm 2 and the closed-form theory (§4) to report: expected iteration
+time, E[T]/E[T_n] straggler ratio, tau*, and the scale curve.
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import (
+    LatencyModel,
+    NoiseModel,
+    expected_step_time,
+    optimal_tau,
+    scale_curve,
+    simulate,
+)
+from repro.core.threshold import select_threshold
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=200)
+    ap.add_argument("--accumulations", type=int, default=12)
+    ap.add_argument("--noise", default="paper_lognormal",
+                    choices=["paper_lognormal", "lognormal", "normal", "exponential", "gamma", "bernoulli"])
+    ap.add_argument("--mean", type=float, default=0.5)
+    ap.add_argument("--var", type=float, default=0.25)
+    ap.add_argument("--tc", type=float, default=0.5)
+    args = ap.parse_args()
+
+    model = LatencyModel(base=0.45, noise=NoiseModel(kind=args.noise, mean=args.mean, var=args.var))
+    n, m = args.workers, args.accumulations
+
+    sim = simulate(model, 200, n, m, tc=args.tc, seed=0)
+    print(f"workers={n} accumulations={m} noise={args.noise}")
+    print(f"  E[T_n] (one worker) = {sim.T_n.mean():.2f}s")
+    print(f"  E[T]  (slowest)     = {sim.T.mean():.2f}s   ratio {sim.T.mean()/sim.T_n.mean():.3f}")
+    print(f"  theory E[T]         = {expected_step_time(model.mean, model.std, m, n, args.tc) - args.tc:.2f}s")
+
+    res = select_threshold(sim.t, sim.tc)
+    print(f"\nAlgorithm 2: {res.summary()}")
+    tau_th, s_th = optimal_tau(model.mean, model.std, m, n, args.tc)
+    print(f"closed-form:  tau*={tau_th:.2f}s  S_eff={s_th:.4f}")
+
+    print("\nscale curve (efficiency vs linear):")
+    curve_b = scale_curve(model, [8, 32, 128, n], m, args.tc, iters=100)
+    curve_d = scale_curve(model, [8, 32, 128, n], m, args.tc, iters=100, tau=res.tau)
+    for w in (8, 32, 128, n):
+        print(f"  N={w:5d}: baseline {curve_b[w][1]:.3f}   dropcompute {curve_d[w][1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Architecture registry: the 10 assigned configs + the paper's own models.
+
+Each module exposes ``config()`` (the exact published architecture) and
+``smoke_config()`` (a reduced same-family variant: <=2-3 layers,
+d_model<=512, <=4 experts) used by the per-arch CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+ARCHITECTURES: List[str] = [
+    "mamba2_130m",
+    "internlm2_1_8b",
+    "recurrentgemma_2b",
+    "qwen2_5_3b",
+    "mixtral_8x22b",
+    "internvl2_1b",
+    "starcoder2_7b",
+    "qwen3_moe_235b_a22b",
+    "gemma3_27b",
+    "whisper_tiny",
+]
+
+# The paper's own models (DropCompute §5: BERT-Large + BERT-1.5B)
+PAPER_MODELS: List[str] = ["bert_large", "bert_1_5b"]
+
+
+def _norm(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str):
+    return importlib.import_module(f"repro.configs.{_norm(name)}").config()
+
+
+def get_smoke_config(name: str):
+    return importlib.import_module(f"repro.configs.{_norm(name)}").smoke_config()
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCHITECTURES}

@@ -1,0 +1,45 @@
+"""internvl2-1b — VLM: InternViT vision encoder + InternLM2 LM
+[arXiv:2404.16821].
+
+LM backbone: 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655.
+Per the assignment the ViT+projector frontend is a STUB — ``input_specs``
+provides 256 precomputed patch embeddings of width d_model.
+Full attention only => long_500k skipped.
+"""
+from repro.models import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-1b",
+        family="vlm",
+        n_layers=24,
+        d_model=896,
+        n_heads=14,
+        n_kv_heads=2,
+        d_ff=4864,
+        vocab_size=151_655,
+        layer_pattern="G",
+        act="swiglu",
+        norm="rmsnorm",
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+        prefix_len=256,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-smoke",
+        family="vlm",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab_size=503,
+        layer_pattern="G",
+        prefix_len=8,
+        dtype="float32",
+        remat=False,
+    )

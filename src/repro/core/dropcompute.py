@@ -1,0 +1,218 @@
+"""DropCompute (Algorithm 1) as a composable JAX module.
+
+The paper's mechanism: during gradient accumulation, each worker tracks the
+wall-clock time of its local micro-batches and, once the cumulative compute
+time crosses a threshold ``tau``, stops computing and joins the All-Reduce
+with whatever gradients it has.  Synchronous semantics are preserved; only
+the *batch size becomes stochastic*.
+
+Two execution modes are provided (see ``repro.core.engine``):
+
+* host-timed — faithful to the paper's user-level implementation: a Python
+  loop around a jitted per-micro-batch gradient step, with a wall-clock
+  check between accumulations;
+* in-graph — the drop decision is computed inside the jitted step from a
+  per-(worker, micro-batch) latency tensor (measured or sampled from
+  ``repro.core.simulate``).  This is fully SPMD-compatible: the mask is a
+  per-example weight and the cross-worker aggregation falls out of the
+  global weighted-mean loss that pjit lowers to an All-Reduce.
+
+This module holds the pure functions shared by both: drop masks,
+normalization semantics, and the masked accumulation scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DropConfig:
+    """Configuration for DropCompute.
+
+    Attributes:
+      enabled: master switch; disabled == vanilla synchronous accumulation.
+      tau: compute threshold in seconds (set via Algorithm 2, see
+        ``repro.core.threshold``). ``inf`` behaves exactly like vanilla.
+      normalize: how the summed micro-batch gradients are normalized.
+        * "nominal"  — divide by the *maximal* batch (paper's Algorithm 1:
+          ``g_n += g^(m) / M``): dropped micro-batches shrink the gradient.
+        * "computed" — divide by the number of actually-computed samples
+          (the stochastic correction of appendix B.2.2); requires one extra
+          scalar All-Reduce which rides along the gradient reduction.
+      min_microbatches: never drop below this many accumulations per worker
+        (guards against pathological thresholds; 1 keeps at least one).
+    """
+
+    enabled: bool = True
+    tau: float = float("inf")
+    normalize: str = "computed"
+    min_microbatches: int = 1
+
+    def __post_init__(self):
+        if self.normalize not in ("nominal", "computed"):
+            raise ValueError(f"bad normalize: {self.normalize}")
+
+
+# ---------------------------------------------------------------------------
+# Drop masks
+# ---------------------------------------------------------------------------
+
+
+def drop_mask(latencies: jnp.ndarray, tau, min_microbatches: int = 1) -> jnp.ndarray:
+    """Compute the keep-mask from per-micro-batch latencies.
+
+    Algorithm 1 line 8: worker n stops once its cumulative compute time
+    exceeds tau, i.e. micro-batch m is *kept* iff  sum_{j<=m} t^(j) < tau.
+
+    Args:
+      latencies: (..., M) per-micro-batch compute times (seconds).
+      tau: scalar threshold.
+      min_microbatches: always keep at least this many leading micro-batches.
+
+    Returns:
+      float mask of the same shape: 1.0 = computed, 0.0 = dropped.
+    """
+    cum = jnp.cumsum(latencies, axis=-1)
+    keep = cum < tau
+    m = latencies.shape[-1]
+    if min_microbatches > 0:
+        idx = jnp.arange(m)
+        keep = keep | (idx < min_microbatches)
+    return keep.astype(jnp.float32)
+
+
+def completed_fraction(mask: jnp.ndarray) -> jnp.ndarray:
+    """M~ / M: average fraction of computed micro-batches (drop rate = 1-x)."""
+    return jnp.mean(mask)
+
+
+# ---------------------------------------------------------------------------
+# Masked gradient accumulation
+# ---------------------------------------------------------------------------
+
+
+def accumulate_grads(
+    grad_fn: Callable[[PyTree, Any], Tuple[PyTree, jnp.ndarray, jnp.ndarray]],
+    params: PyTree,
+    microbatches: PyTree,
+    mask: jnp.ndarray,
+    cfg: DropConfig,
+) -> Tuple[PyTree, jnp.ndarray, dict]:
+    """Scan over micro-batches, accumulating masked gradients (Algorithm 1).
+
+    Args:
+      grad_fn: (params, microbatch) -> (grads_sum, loss_sum, weight_sum)
+        where grads/loss are *sums* over the micro-batch's examples/tokens
+        and weight_sum is the number of tokens contributing.  Summing (not
+        averaging) inside lets the normalization semantics live here.
+      params: model parameters.
+      microbatches: pytree whose leaves have leading dim M (micro-batch axis).
+      mask: (M,) keep mask for the local worker (from ``drop_mask``).
+      cfg: DropConfig.
+
+    Returns:
+      (grads, loss, stats) — grads normalized per ``cfg.normalize``; under
+      pjit with the batch sharded over the data axis, the mean over workers
+      of eq. (1) is realized by the compiler as an All-Reduce of these sums.
+    """
+    m = mask.shape[0]
+
+    def body(carry, xs):
+        g_acc, loss_acc, w_acc = carry
+        mb, keep = xs
+
+        def run(_):
+            g, l, w = grad_fn(params, mb)
+            return g, l, w
+
+        def skip(_):
+            return (
+                jax.tree.map(jnp.zeros_like, g_acc),
+                jnp.zeros_like(loss_acc),
+                jnp.zeros_like(w_acc),
+            )
+
+        # lax.cond: dropped micro-batches cost ~0 compute in the lowered
+        # program (both branches exist in HLO but only one executes).
+        g, l, w = jax.lax.cond(keep > 0.5, run, skip, operand=None)
+        g_acc = jax.tree.map(jnp.add, g_acc, g)
+        return (g_acc, loss_acc + l, w_acc + w), None
+
+    g0 = jax.tree.map(jnp.zeros_like, params)
+    (g_sum, loss_sum, w_sum), _ = jax.lax.scan(
+        body, (g0, jnp.zeros(()), jnp.zeros(())), (microbatches, mask)
+    )
+
+    if cfg.normalize == "computed":
+        denom = jnp.maximum(w_sum, 1.0)
+    else:  # nominal: divide by the weight the full batch *would* have had.
+        # Estimate the nominal per-microbatch weight from the computed ones;
+        # exact when all micro-batches carry equal token counts.
+        per_mb = w_sum / jnp.maximum(jnp.sum(mask), 1.0)
+        denom = jnp.maximum(per_mb * m, 1.0)
+
+    grads = jax.tree.map(lambda g: g / denom, g_sum)
+    loss = loss_sum / jnp.maximum(w_sum, 1.0)
+    stats = {
+        "completed_microbatches": jnp.sum(mask),
+        "completed_fraction": jnp.sum(mask) / m,
+        "computed_weight": w_sum,
+        "grad_denom": denom,
+    }
+    return grads, loss, stats
+
+
+# ---------------------------------------------------------------------------
+# Per-example weighting formulation (for single-pass global-batch steps)
+# ---------------------------------------------------------------------------
+
+
+def example_weights(
+    mask: jnp.ndarray, batch_per_worker: int, microbatch_size: int
+) -> jnp.ndarray:
+    """Expand a (workers, M) keep-mask to per-example weights (workers*B,).
+
+    Used by the SPMD dry-run/train step where the whole global batch is one
+    tensor sharded over the data axis: example e of worker n belongs to
+    micro-batch  floor(e / microbatch_size)  and inherits its mask.
+    """
+    w, m = mask.shape
+    assert m * microbatch_size == batch_per_worker, (m, microbatch_size, batch_per_worker)
+    per_ex = jnp.repeat(mask, microbatch_size, axis=1)  # (workers, B)
+    return per_ex.reshape(w * batch_per_worker)
+
+
+def weighted_loss(
+    token_losses: jnp.ndarray,
+    token_weights: jnp.ndarray,
+    ex_weights: jnp.ndarray,
+    cfg: DropConfig,
+    nominal_weight: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Global weighted-mean loss implementing eq. (1) + drop normalization.
+
+    Args:
+      token_losses: (B, S) per-token CE.
+      token_weights: (B, S) 1.0 for real tokens, 0.0 for padding.
+      ex_weights: (B,) DropCompute keep weights from ``example_weights``.
+      nominal_weight: scalar total token weight of the *undropped* batch
+        (required for normalize="nominal").
+
+    Returns (scalar loss, scalar computed-weight).
+    """
+    w = token_weights * ex_weights[:, None]
+    num = jnp.sum(token_losses * w)
+    computed = jnp.sum(w)
+    if cfg.normalize == "computed":
+        denom = jnp.maximum(computed, 1.0)
+    else:
+        if nominal_weight is None:
+            nominal_weight = jnp.sum(token_weights)
+        denom = jnp.maximum(nominal_weight, 1.0)
+    return num / denom, computed

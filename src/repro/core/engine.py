@@ -1,0 +1,149 @@
+"""Gradient-accumulation engines implementing Algorithm 1.
+
+Two interchangeable engines produce ``(grads, loss, stats)`` for one
+optimizer step:
+
+* ``HostTimedEngine`` — the paper's user-level implementation, faithfully:
+  a Python loop over a jitted per-micro-batch gradient step with a
+  wall-clock check between accumulations (the "do (1) and (2) in parallel"
+  of Algorithm 1 degenerates to a timeout check between accumulations,
+  exactly like the paper's reference implementation; see its §6
+  Limitations).  Used for real training runs where compute variance is
+  physical.
+
+* ``InGraphEngine`` — a single jitted step that scans over micro-batches
+  and masks them from a latency tensor (measured previously or sampled
+  from a ``LatencyModel``).  Deterministic and SPMD-friendly; used for the
+  reproducible experiments, the benchmarks and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dropcompute import DropConfig, accumulate_grads, drop_mask
+from .simulate import LatencyModel
+
+PyTree = Any
+
+# grad_fn(params, microbatch) -> (grads_sum, loss_sum, weight_sum)
+GradFn = Callable[[PyTree, Any], Tuple[PyTree, jnp.ndarray, jnp.ndarray]]
+
+
+def make_grad_fn(loss_fn: Callable[[PyTree, Any], Tuple[jnp.ndarray, jnp.ndarray]]) -> GradFn:
+    """Lift loss_fn(params, mb) -> (loss_sum, weight_sum) into a GradFn."""
+
+    def summed(params, mb):
+        loss_sum, w = loss_fn(params, mb)
+        return loss_sum, w
+
+    def grad_fn(params, mb):
+        (loss_sum, w), grads = jax.value_and_grad(summed, has_aux=True)(params, mb)
+        return grads, loss_sum, w
+
+    return grad_fn
+
+
+class HostTimedEngine:
+    """Algorithm 1 with real wall-clock timing (decentralized).
+
+    Every call to ``step`` runs micro-batches until either all M are done or
+    the measured compute time exceeds ``cfg.tau``.  Latency samples are
+    recorded so a profiling phase can feed Algorithm 2.
+    """
+
+    def __init__(self, grad_fn: GradFn, cfg: DropConfig):
+        self.cfg = cfg
+        self._grad_fn = jax.jit(grad_fn)
+        self._acc = jax.jit(
+            lambda a, g, l, w, ls, ws: (
+                jax.tree.map(jnp.add, a, g),
+                ls + l,
+                ws + w,
+            )
+        )
+        self.latency_log: list[list[float]] = []
+
+    def step(self, params: PyTree, microbatches: PyTree) -> Tuple[PyTree, jnp.ndarray, dict]:
+        m = jax.tree.leaves(microbatches)[0].shape[0]
+        g_sum = None
+        loss_sum = jnp.zeros(())
+        w_sum = jnp.zeros(())
+        lat: list[float] = []
+        computed = 0
+        t0 = time.perf_counter()
+        for i in range(m):
+            if (
+                self.cfg.enabled
+                and computed >= self.cfg.min_microbatches
+                and (time.perf_counter() - t0) > self.cfg.tau
+            ):
+                break  # drop remaining compute, go to All-Reduce
+            mb = jax.tree.map(lambda x: x[i], microbatches)
+            tm0 = time.perf_counter()
+            g, l, w = self._grad_fn(params, mb)
+            jax.block_until_ready(l)
+            lat.append(time.perf_counter() - tm0)
+            if g_sum is None:
+                g_sum, loss_sum, w_sum = g, l, w
+            else:
+                g_sum, loss_sum, w_sum = self._acc(g_sum, g, l, w, loss_sum, w_sum)
+            computed += 1
+        self.latency_log.append(lat)
+
+        if self.cfg.normalize == "computed":
+            denom = jnp.maximum(w_sum, 1.0)
+        else:
+            denom = jnp.maximum(w_sum / max(computed, 1) * m, 1.0)
+        grads = jax.tree.map(lambda g: g / denom, g_sum)
+        stats = {
+            "completed_microbatches": float(computed),
+            "completed_fraction": computed / m,
+            "computed_weight": w_sum,
+        }
+        return grads, loss_sum / jnp.maximum(w_sum, 1.0), stats
+
+    def profile(self) -> np.ndarray:
+        """(I, 1, M) latency tensor for Algorithm 2 (ragged rows padded)."""
+        if not self.latency_log:
+            return np.zeros((0, 1, 0))
+        m = max(len(r) for r in self.latency_log)
+        out = np.full((len(self.latency_log), m), np.nan)
+        for i, r in enumerate(self.latency_log):
+            out[i, : len(r)] = r
+        return out[:, None, :]
+
+
+class InGraphEngine:
+    """Algorithm 1 with the drop decision inside the jitted step.
+
+    The latency tensor (M,) or (workers, M) is an *input*; pair with
+    ``LatencyModel.sample`` for simulation or with measured host timings.
+    """
+
+    def __init__(self, grad_fn: GradFn, cfg: DropConfig):
+        self.cfg = cfg
+        self._step = jax.jit(functools.partial(self._step_impl, grad_fn, cfg))
+
+    @staticmethod
+    def _step_impl(grad_fn, cfg, params, microbatches, latencies):
+        mask = drop_mask(latencies, cfg.tau, cfg.min_microbatches)
+        if not cfg.enabled:
+            mask = jnp.ones_like(mask)
+        return accumulate_grads(grad_fn, params, microbatches, mask, cfg)
+
+    def step(self, params, microbatches, latencies):
+        return self._step(params, microbatches, jnp.asarray(latencies))
+
+
+def simulated_latencies(
+    model: LatencyModel, steps: int, workers: int, m: int, seed: int = 0
+) -> np.ndarray:
+    """(steps, workers, M) host-side latency draws for InGraphEngine."""
+    rng = np.random.default_rng(seed)
+    return model.sample(rng, steps, workers, m)

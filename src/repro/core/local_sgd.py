@@ -1,0 +1,147 @@
+"""Local-SGD + DropCompute (appendix B.3).
+
+Local-SGD performs H local optimizer steps per worker between parameter
+averaging rounds.  DropCompute integrates by treating *local steps* the way
+Algorithm 1 treats gradient accumulations: when a worker's cumulative
+compute time within a synchronization period crosses ``tau``, it skips its
+remaining local steps and waits at the averaging barrier.
+
+Two pieces:
+  * a runtime model reproducing fig. 12 (straggling workers drawn per local
+    step, uniform vs. single-server scenarios);
+  * a functional trainer that runs N virtual workers (stacked params,
+    vmapped local steps) so convergence with dropped local steps can be
+    checked on a real (small) task.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Runtime model (fig. 12)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerScenario:
+    """Per-local-step straggler injection.
+
+    mode="uniform": every (worker, step) is independently a straggler with
+    probability p.  mode="single_server": only workers [0, server_size) can
+    straggle (the realistic "one bad host" case).
+    """
+
+    mode: str = "uniform"
+    p: float = 0.04
+    delay: float = 1.0
+    base: float = 0.1
+    server_size: int = 8
+
+    def sample(self, rng: np.random.Generator, iters: int, n: int, h: int):
+        t = np.full((iters, n, h), self.base)
+        hit = rng.random((iters, n, h)) < self.p
+        if self.mode == "single_server":
+            mask = np.zeros((1, n, 1), dtype=bool)
+            mask[:, : self.server_size] = True
+            hit = hit & mask
+        return t + hit * self.delay
+
+
+def localsgd_speedup(
+    scenario: StragglerScenario,
+    n_workers: int,
+    sync_period: int,
+    tau: float | None = None,
+    iters: int = 500,
+    tc: float = 0.05,
+    seed: int = 0,
+):
+    """Relative speedup of (Local-SGD [+DropCompute]) vs fully synchronous.
+
+    Synchronous baseline: barrier after every local step ->
+        sum_h max_n t[:, n, h].
+    Local-SGD: barrier only after H steps -> max_n sum_h t[:, n, h].
+    +DropCompute: each worker caps its per-period compute at tau.
+
+    Returns (speedup, dropped_fraction).
+    """
+    rng = np.random.default_rng(seed)
+    t = scenario.sample(rng, iters, n_workers, sync_period)  # (I, N, H)
+
+    sync = t.max(axis=1).sum(axis=-1) + sync_period * tc  # (I,)
+    per_worker = t.sum(axis=-1)  # (I, N)
+
+    if tau is None:
+        local = per_worker.max(axis=1) + tc
+        drop = 0.0
+    else:
+        cum = np.cumsum(t, axis=-1)
+        done = cum < tau
+        drop = 1.0 - done.mean()
+        local = np.minimum(per_worker, tau).max(axis=1) + tc
+    return float(sync.mean() / local.mean()), float(drop)
+
+
+# ---------------------------------------------------------------------------
+# Functional Local-SGD trainer (N virtual workers on one device)
+# ---------------------------------------------------------------------------
+
+
+def localsgd_train(
+    loss_fn: Callable,
+    params,
+    data_fn: Callable[[int, int], tuple],  # (round, worker) -> microbatch seq
+    n_workers: int,
+    rounds: int,
+    sync_period: int,
+    lr: float,
+    keep_mask: np.ndarray | None = None,
+):
+    """Run Local-SGD with optional per-(round, worker, step) keep mask.
+
+    ``keep_mask[r, n, h] = 0`` means worker n skips local step h in round r
+    (DropCompute drop).  Parameters are averaged across workers after each
+    round.  Returns (params, losses per round).
+    """
+    stacked = jax.tree.map(lambda x: jnp.stack([x] * n_workers), params)
+    grad = jax.grad(loss_fn)
+
+    @jax.jit
+    def local_round(ps, batches, keep):
+        # ps: stacked params (N, ...); batches: (N, H, ...); keep: (N, H)
+        def worker_steps(p, bs, ks):
+            def body(p, xh):
+                b, k = xh
+                g = grad(p, b)
+                p = jax.tree.map(lambda w, gg: w - lr * k * gg, p, g)
+                return p, loss_fn(p, b)
+
+            p, losses = jax.lax.scan(body, p, (bs, ks))
+            return p, losses.mean()
+
+        ps, losses = jax.vmap(worker_steps)(ps, batches, keep)
+        avg = jax.tree.map(lambda x: jnp.mean(x, axis=0, keepdims=True), ps)
+        ps = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_workers,) + a.shape[1:]), avg)
+        return ps, losses.mean()
+
+    losses = []
+    for r in range(rounds):
+        batches = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[data_fn(r, n) for n in range(n_workers)],
+        )
+        keep = (
+            jnp.asarray(keep_mask[r], dtype=jnp.float32)
+            if keep_mask is not None
+            else jnp.ones((n_workers, sync_period))
+        )
+        stacked, l = local_round(stacked, batches, keep)
+        losses.append(float(l))
+    final = jax.tree.map(lambda x: x[0], stacked)
+    return final, losses

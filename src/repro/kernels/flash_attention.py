@@ -1,0 +1,116 @@
+"""Flash attention Pallas TPU kernel (causal / sliding-window, GQA).
+
+TPU-native blocking: queries are tiled to (BLOCK_Q, head_dim) VMEM tiles
+and the kernel streams key/value tiles of (BLOCK_K, head_dim) through
+VMEM, maintaining the online-softmax running max/sum in VREGs.  Block
+sizes default to 128 to align with the MXU's 128x128 systolic array and
+the (8, 128) VREG lanes.
+
+Grid: (batch*kv_heads*q_groups, Sq / BLOCK_Q).  Each program instance owns
+one query tile for one (batch, head) pair and loops over its admissible
+key tiles with ``jax.lax.fori_loop`` (causal/sliding-window pruning of the
+loop bounds — skipped tiles cost nothing, the TPU analogue of the CUDA
+early-exit).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, *, sq, sk, block_q, block_k, causal, window, sm_scale
+):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * sm_scale  # (block_q, d)
+
+    q_start = qi * block_q
+    qpos = q_start + jax.lax.iota(jnp.int32, block_q) + (sk - sq)  # right-aligned
+
+    # Admissible key-tile range for this query tile (loop-bound pruning).
+    if causal:
+        hi = jnp.minimum((q_start + block_q - 1 + (sk - sq)) // block_k + 1, sk // block_k)
+    else:
+        hi = sk // block_k
+    if window > 0:
+        lo = jnp.maximum((q_start + (sk - sq) - window + 1) // block_k, 0)
+    else:
+        lo = 0
+
+    def body(ki, carry):
+        acc, m_prev, l_prev = carry
+        k_tile = pl.load(k_ref, (pl.dslice(ki * block_k, block_k), slice(None)))
+        v_tile = pl.load(v_ref, (pl.dslice(ki * block_k, block_k), slice(None)))
+        s = jnp.dot(q, k_tile.astype(jnp.float32).T)  # (bq, bk)
+
+        kpos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v_tile.astype(jnp.float32))
+        return acc, m_cur, l_cur
+
+    d = q_ref.shape[-1]
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(lo, hi, body, (acc0, m0, l0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, H, Sq, D)
+    k: jnp.ndarray,  # (B, KV, Sk, D)
+    v: jnp.ndarray,  # (B, KV, Sk, D)
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    g = h // kvh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+
+    # Flatten (B, KV, G) onto the leading grid axis; queries grouped by KV.
+    qr = q.reshape(b * kvh * g, sq, d)
+    kr = jnp.repeat(k.reshape(b * kvh, sk, d), g, axis=0)
+    vr = jnp.repeat(v.reshape(b * kvh, sk, d), g, axis=0)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        sq=sq, sk=sk, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, sm_scale=1.0 / math.sqrt(d),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, sq // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, sk, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, sk, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, d)

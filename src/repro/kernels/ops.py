@@ -1,0 +1,55 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU,
+where the kernels lower to Mosaic.  The pure-jnp oracles live in ref.py;
+tests sweep shapes/dtypes asserting allclose between the two.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .masked_accum import masked_accum as _maccum, masked_accum_tree as _maccum_tree
+from .rmsnorm import rmsnorm as _rmsnorm
+from .ssd_chunk import ssd_chunk as _ssd_chunk
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, causal=True, window=0, block_q=128, block_k=128, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, scale, eps=1e-6, block_rows=256, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _rmsnorm(x, scale, eps=eps, block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def masked_accum(acc, grad, keep, scale=1.0, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _maccum(acc, grad, keep, scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def masked_accum_tree(acc_tree, grad_tree, keep, scale=1.0, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _maccum_tree(acc_tree, grad_tree, keep, scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x, dt, cum, b, c, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ssd_chunk(x, dt, cum, b, c, interpret=interpret)

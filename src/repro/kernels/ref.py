@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # (B, H, Sq, D)
+    k: jnp.ndarray,  # (B, KV, Sk, D)
+    v: jnp.ndarray,  # (B, KV, Sk, D)
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Naive attention with GQA head grouping and optional sliding window."""
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, sq, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) / math.sqrt(d)
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # right-aligned
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunk_ref(
+    x: jnp.ndarray,  # (B, NC, L, H, P)
+    dt: jnp.ndarray,  # (B, NC, L, H)
+    cum: jnp.ndarray,  # (B, NC, L, H)
+    b: jnp.ndarray,  # (B, NC, L, N)
+    c: jnp.ndarray,  # (B, NC, L, N)
+) -> jnp.ndarray:
+    """Intra-chunk SSD term (same math as models.ssm._ssd_chunked y_intra)."""
+    l = x.shape[2]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    li = jnp.tril(jnp.ones((l, l), bool))[None, None, :, :, None]
+    decay = jnp.exp(-jnp.where(li, diff, 0.0)) * li
+    scores = jnp.einsum("bgin,bgjn->bgij", c.astype(jnp.float32), b.astype(jnp.float32))
+    att = scores[..., None] * decay * dt[:, :, None, :, :]
+    return jnp.einsum("bgijh,bgjhp->bgihp", att, x.astype(jnp.float32)).astype(x.dtype)
+
+
+def masked_accum_ref(
+    acc: jnp.ndarray, grad: jnp.ndarray, keep: jnp.ndarray, scale: float = 1.0
+) -> jnp.ndarray:
+    """acc += keep * scale * grad  (fp32 accumulator, arbitrary grad dtype).
+
+    The DropCompute hot loop: Algorithm 1 line 7 fused into one pass over
+    the gradient buffers.
+    """
+    return acc + keep.astype(jnp.float32) * scale * grad.astype(jnp.float32)

@@ -1,0 +1,78 @@
+"""SSD intra-chunk Pallas TPU kernel (Mamba-2's dominant compute).
+
+Computes, for one (sequence-chunk, head) tile, the within-chunk term of
+the state-space dual form:
+
+    y[i] = sum_{j<=i} (C_i . B_j) * exp(cum[i] - cum[j]) * dt[j] * x[j]
+
+i.e. masked decay-weighted attention with scores C B^T — two (L,L)xP
+matmuls on the MXU plus VPU elementwise for the decay mask, exactly the
+blocked structure `repro.models.ssm._ssd_chunked` evaluates in jnp (which
+is the oracle, `ref.ssd_chunk_ref`).  The inter-chunk recurrence stays in
+lax.scan (short serial dimension), matching the SSD paper's split.
+
+Grid: (batch * n_chunks, heads).  VMEM per instance at L=256, N=128,
+P=64 fp32: CB scores 256x256 + decay 256x256 + x/y 256x64 + B/C 256x128
+~ 0.8 MiB — comfortably double-buffered.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[...].astype(jnp.float32)  # (L,)
+    cum = cum_ref[...].astype(jnp.float32)  # (L,) cumulative log-decay
+    b = b_ref[...].astype(jnp.float32)  # (L, N)
+    c = c_ref[...].astype(jnp.float32)  # (L, N)
+
+    l = x.shape[0]
+    scores = jnp.dot(c, b.T)  # (L, L): C_i . B_j
+    diff = cum[:, None] - cum[None, :]
+    li = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (l, l), 1
+    )
+    decay = jnp.exp(-jnp.where(li, diff, 0.0)) * li
+    att = scores * decay * dt[None, :]
+    o_ref[...] = jnp.dot(att, x).astype(o_ref.dtype)
+
+
+def ssd_chunk(
+    x: jnp.ndarray,  # (B, NC, L, H, P)
+    dt: jnp.ndarray,  # (B, NC, L, H)
+    cum: jnp.ndarray,  # (B, NC, L, H) cumulative log-decay within chunk
+    b: jnp.ndarray,  # (B, NC, L, N)
+    c: jnp.ndarray,  # (B, NC, L, N)
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Intra-chunk SSD term, (B, NC, L, H, P)."""
+    bs, nc, l, h, p = x.shape
+    n = b.shape[-1]
+    g = bs * nc
+
+    xr = x.reshape(g, l, h, p)
+    dtr = dt.reshape(g, l, h)
+    cumr = cum.reshape(g, l, h)
+    br = jnp.broadcast_to(b.reshape(g, l, 1, n), (g, l, h, n))
+    cr = jnp.broadcast_to(c.reshape(g, l, 1, n), (g, l, h, n))
+
+    out = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=(g, h),
+        in_specs=[
+            pl.BlockSpec((None, l, None, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((None, l, None), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((None, l, None), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((None, l, None, n), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((None, l, None, n), lambda i, j: (i, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, l, None, p), lambda i, j: (i, 0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, l, h, p), x.dtype),
+        interpret=interpret,
+    )(xr, dtr, cumr, br, cr)
+    return out.reshape(bs, nc, l, h, p)

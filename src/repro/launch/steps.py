@@ -1,0 +1,252 @@
+"""SPMD step functions + abstract input specs for every (arch x shape).
+
+``make_train_step`` builds the full DropCompute training step: scan over
+M micro-batches, per-(worker, microbatch) drop mask applied as example
+weights, global weighted-mean gradient (the All-Reduce of eq. 1 falls out
+of pjit), clip, optimizer update.
+
+``make_serve_step`` builds the one-token decode step over a pre-allocated
+KV/state cache (decode_32k, long_500k shapes).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for every model input.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.dropcompute import DropConfig, drop_mask
+from ..dist.sharding import batch_spec
+from ..models import ModelConfig, InputShape, decode_step, init_decode_cache, init_params, loss_fn
+from ..models import model as model_lib
+from ..optim import apply_updates, clip_by_global_norm, make as make_opt
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def input_specs(
+    cfg: ModelConfig, shape: InputShape, mesh=None, n_workers: Optional[int] = None
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for one workload shape (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    if shape.mode == "train":
+        text = s - cfg.prefix_len if cfg.prefix_len else s
+        batch = {"tokens": sds((b, text), i32), "weights": sds((b, text), f32)}
+        if cfg.prefix_len:
+            batch["prefix"] = sds((b, cfg.prefix_len, cfg.d_model), cfg.compute_dtype)
+        if cfg.is_encdec:
+            batch["frames"] = sds((b, cfg.enc_seq, cfg.d_model), cfg.compute_dtype)
+        w = n_workers or (dp_size(mesh) if mesh is not None else 1)
+        specs = {
+            "batch": batch,
+            "latencies": sds((w, shape.microbatches), f32),
+        }
+        return specs
+
+    if shape.mode == "prefill":
+        text = s - cfg.prefix_len if cfg.prefix_len else s
+        batch = {"tokens": sds((b, text), i32)}
+        if cfg.prefix_len:
+            batch["prefix"] = sds((b, cfg.prefix_len, cfg.d_model), cfg.compute_dtype)
+        if cfg.is_encdec:
+            batch["frames"] = sds((b, cfg.enc_seq, cfg.d_model), cfg.compute_dtype)
+        return {"batch": batch}
+
+    # decode: one new token against a seq_len cache
+    return {
+        "token": sds((b, 1), i32),
+        "pos": sds((), i32),
+    }
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_opt_state(cfg: ModelConfig, opt, params_abs: PyTree) -> PyTree:
+    return jax.eval_shape(opt.init, params_abs)
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape) -> PyTree:
+    def build():
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        enc_out = (
+            jnp.zeros((shape.global_batch, cfg.enc_seq, cfg.d_model), cfg.compute_dtype)
+            if cfg.is_encdec
+            else None
+        )
+        return init_decode_cache(params, cfg, shape.global_batch, shape.seq_len, enc_out)
+
+    return jax.eval_shape(build)
+
+
+# ---------------------------------------------------------------------------
+# Train step (DropCompute in-graph, SPMD)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    shape: InputShape,
+    drop: DropConfig,
+    n_workers: int,
+    optimizer: str = "adamw",
+    lr: float = 1e-4,
+    clip_norm: float = 1.0,
+    moe_impl: str = "sort",
+    state_dtype=jnp.float32,
+    accum_dtype=jnp.float32,
+    cast_params_once: bool = False,
+):
+    """Returns (opt, step_fn(params, opt_state, batch, latencies)).
+
+    ``state_dtype``/``accum_dtype`` let >100B models halve their Adam
+    moments / gradient-accumulator footprint (bf16) on 16 GB chips.
+
+    ``cast_params_once``: cast fp32 params to the compute dtype ONCE,
+    outside the micro-batch scan, so per-layer FSDP all-gathers move bf16
+    instead of f32 (halves gather volume; gathers repeat every micro-batch
+    + remat recompute).  Gradients are then computed w.r.t. the bf16 copy
+    and accumulated in ``accum_dtype`` — a §Perf hillclimb lever.
+    """
+    opt = make_opt(optimizer, lr, state_dtype=state_dtype) if optimizer == "adamw" else make_opt(optimizer, lr)
+    m = shape.microbatches
+    b = shape.global_batch
+    assert b % (n_workers * m) == 0, (b, n_workers, m)
+    mbw = b // (n_workers * m)  # rows per (worker, microbatch)
+
+    def grad_one(params, mb, ex_w):
+        def lsum(p):
+            batch = dict(mb)
+            batch["weights"] = batch["weights"] * ex_w[:, None]
+            return loss_fn(p, cfg, batch, moe_impl=moe_impl)
+
+        (loss_sum, w_sum), grads = jax.value_and_grad(lambda p: lsum(p), has_aux=True)(params)
+        return grads, loss_sum, w_sum
+
+    def step(params, opt_state, batch, latencies):
+        # --- Algorithm 1: drop mask from per-(worker, microbatch) latency ---
+        mask = drop_mask(latencies, drop.tau, drop.min_microbatches)  # (W, M)
+        if not drop.enabled:
+            mask = jnp.ones_like(mask)
+
+        # Reorder the global batch so axis0 = microbatch index: rows of
+        # worker w stay in w's shard ((W, M, mbw) -> (M, W*mbw)).
+        def to_micro(x):
+            xs = x.reshape(n_workers, m, mbw, *x.shape[1:])
+            return jnp.moveaxis(xs, 1, 0).reshape(m, n_workers * mbw, *x.shape[1:])
+
+        micro = jax.tree.map(to_micro, batch)
+        ex_w = jnp.repeat(mask.T, mbw, axis=1)  # (M, W*mbw)
+
+        if cast_params_once:
+            params_use = jax.tree.map(
+                lambda p: p.astype(cfg.compute_dtype)
+                if p.dtype == jnp.float32 and p.ndim >= 2 else p,
+                params,
+            )
+        else:
+            params_use = params
+
+        def body(carry, xs):
+            g_acc, l_acc, w_acc = carry
+            mb, w_row = xs
+            g, l, w = grad_one(params_use, mb, w_row)
+            g_acc = jax.tree.map(lambda a, gg: a + gg.astype(a.dtype), g_acc, g)
+            return (g_acc, l_acc + l, w_acc + w), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+        (g_sum, loss_sum, w_sum), _ = jax.lax.scan(
+            body, (g0, jnp.zeros(()), jnp.zeros(())), (micro, ex_w)
+        )
+
+        # --- eq. (1) normalization (nominal vs computed, §B.2.2) ---
+        if drop.normalize == "computed":
+            denom = jnp.maximum(w_sum, 1.0)
+        else:
+            per_mb = w_sum / jnp.maximum(jnp.sum(mask), 1.0)
+            denom = jnp.maximum(per_mb * m * n_workers, 1.0)
+        grads = jax.tree.map(lambda g: g / denom, g_sum)
+
+        if clip_norm > 0:
+            grads = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {
+            "loss": loss_sum / jnp.maximum(w_sum, 1.0),
+            "completed_fraction": jnp.mean(mask),
+            "computed_weight": w_sum,
+        }
+        return params, opt_state, metrics
+
+    return opt, step
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, moe_impl: str = "sort"):
+    def step(params, batch):
+        # logits only for the LAST position — full-sequence logits at 32k x
+        # 262k vocab would be hundreds of GB/device.
+        x, _ = model_lib.forward_features(params, cfg, batch, moe_impl=moe_impl)
+        from ..models import layers as L
+
+        logits = L.unembed(params["embed"], x[:, -1:], cfg)
+        return jnp.argmax(logits[:, -1], axis=-1)
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig, moe_impl: str = "dense"):
+    def step(params, cache, token, pos):
+        logits, cache = decode_step(params, cfg, cache, token, pos, moe_impl=moe_impl)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
+        return next_tok, cache
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Input shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(cfg: ModelConfig, shape: InputShape, mesh) -> PyTree:
+    bs = batch_spec(mesh, shape.global_batch)
+
+    def leaf_spec(x):
+        return NamedSharding(mesh, P(bs[0], *([None] * (len(x.shape) - 1))))
+
+    specs = input_specs(cfg, shape, mesh)
+    out: Dict[str, Any] = {}
+    if "batch" in specs:
+        out["batch"] = jax.tree.map(leaf_spec, specs["batch"])
+    if "latencies" in specs:
+        out["latencies"] = NamedSharding(mesh, P(bs[0], None))
+    if "token" in specs:
+        out["token"] = NamedSharding(mesh, P(bs[0], None))
+        out["pos"] = NamedSharding(mesh, P())
+    return out

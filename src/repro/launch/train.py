@@ -1,0 +1,69 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
+        --steps 20 --drop-compute --auto-threshold
+
+Selects an architecture from the registry (``--arch``, full or ``--smoke``
+reduced config), builds the data pipeline and the DropCompute trainer, and
+runs.  On a multi-device system pass ``--mesh data,model`` dims to shard
+via the production sharding rules; on CPU it runs the virtual-worker
+simulation path (the physical-cluster behaviour is exercised by the
+dry-run, ``repro.launch.dryrun``).
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import ARCHITECTURES, PAPER_MODELS, get_config, get_smoke_config
+from repro.core import DropConfig, LatencyModel, NoiseModel
+from repro.data import DataConfig
+from repro.train import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help=f"one of {ARCHITECTURES + PAPER_MODELS}")
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the reduced same-family config (CPU-trainable)")
+    ap.add_argument("--full-config", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "lamb", "lans", "sgd"])
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--drop-compute", action="store_true")
+    ap.add_argument("--tau", type=float, default=float("inf"))
+    ap.add_argument("--auto-threshold", action="store_true")
+    ap.add_argument("--normalize", default="computed", choices=["computed", "nominal"])
+    ap.add_argument("--noise", default="paper_lognormal")
+    ap.add_argument("--tc", type=float, default=0.5)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"family={cfg.family} pattern={cfg.layer_pattern}")
+
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      batch_size=args.batch, strategy="pack", seed=args.seed)
+    tcfg = TrainConfig(
+        steps=args.steps, n_workers=args.workers, microbatches=args.microbatches,
+        optimizer=args.optimizer, lr=args.lr,
+        drop=DropConfig(enabled=args.drop_compute, tau=args.tau, normalize=args.normalize),
+        auto_threshold=args.auto_threshold, calibration_steps=min(20, args.steps // 2),
+        latency=LatencyModel(base=0.45, noise=NoiseModel(kind=args.noise)),
+        tc=args.tc, seed=args.seed,
+        ckpt_dir=args.ckpt or None, ckpt_every=50 if args.ckpt else 0,
+    )
+    r = train(cfg, data, tcfg)
+    print(f"[train] loss {r.losses[0]:.3f} -> {r.losses[-1]:.3f}  "
+          f"sim time {r.metrics['total_sim_time']:.0f}s  "
+          f"drop {np.mean(r.drop_fractions):.1%}  tau={r.tau}")
+
+
+if __name__ == "__main__":
+    main()

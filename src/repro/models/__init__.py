@@ -1,0 +1,24 @@
+"""Composable model definitions for all assigned architecture families."""
+from .config import INPUT_SHAPES, InputShape, ModelConfig
+from .model import (
+    decode_step,
+    encode,
+    forward,
+    init_decode_cache,
+    init_params,
+    loss_fn,
+    per_token_losses,
+)
+
+__all__ = [
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "decode_step",
+    "encode",
+    "forward",
+    "init_decode_cache",
+    "init_params",
+    "loss_fn",
+    "per_token_losses",
+]

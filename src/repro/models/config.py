@@ -1,0 +1,204 @@
+"""Unified model configuration covering all assigned architecture families.
+
+One dataclass describes dense / MoE / SSM / hybrid / VLM / audio (enc-dec)
+backbones.  The per-layer block sequence is given by ``layer_pattern``, a
+string repeated/truncated to ``n_layers``:
+
+    'G' — global (full causal) attention block
+    'L' — local (sliding-window) attention block
+    'R' — RG-LRU recurrent block (Griffin / RecurrentGemma)
+    'M' — Mamba-2 SSD block
+
+Every concrete config lives in ``repro.configs.<id>`` with its citation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense|moe|ssm|hybrid|vlm|audio
+    # Trunk
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    d_ff: int = 1024
+    vocab_size: int = 1000
+    # Attention
+    layer_pattern: str = "G"
+    sliding_window: int = 1024
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    use_qk_norm: bool = False
+    logit_softcap: float = 0.0
+    # Block/act/norm
+    act: str = "swiglu"  # swiglu|geglu|gelu
+    norm: str = "rmsnorm"  # rmsnorm|layernorm
+    tie_embeddings: bool = True
+    # MoE
+    n_experts: int = 0
+    top_k: int = 2
+    moe_d_ff: int = 0  # per-expert hidden; 0 -> d_ff
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # SSM (Mamba-2 / SSD  [arXiv:2405.21060])
+    ssm_state: int = 128
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    ssm_conv: int = 4
+    # RG-LRU (Griffin  [arXiv:2402.19427])
+    rglru_expand: float = 1.5
+    rglru_conv: int = 4
+    # Encoder (audio enc-dec; the conv/mel frontend is a stub per spec)
+    enc_layers: int = 0
+    enc_seq: int = 1500
+    # VLM prefix (the ViT encoder + projector is a stub per spec)
+    prefix_len: int = 0
+    # Numerics
+    dtype: str = "bfloat16"  # activation/compute dtype
+    param_dtype: str = "float32"
+    remat: bool = True
+    # Positional scheme: rope|learned|none
+    pos: str = "rope"
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def pattern(self) -> str:
+        """Per-layer block types, length n_layers."""
+        p = (self.layer_pattern * (self.n_layers // len(self.layer_pattern) + 1))
+        return p[: self.n_layers]
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.enc_layers > 0
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def params_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Exact total parameter count (for 6ND roofline numbers).
+
+        Computed by abstract evaluation of the real initializer (zero
+        allocation) and cached — always consistent with the model code.
+        """
+        return _exact_param_count(self)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        d = self.d_model
+        full_moe = self.n_experts * self._expert_params()
+        active_moe = self.top_k * self._expert_params()
+        return self.param_count() - len(self.pattern) * (full_moe - active_moe) // 1
+
+    def _attn_params(self) -> int:
+        d, h, kv, hd = self.d_model, self.n_heads, self.n_kv_heads, self.hd
+        n = d * h * hd + 2 * d * kv * hd + h * hd * d
+        if self.qkv_bias:
+            n += (h + 2 * kv) * hd
+        return n
+
+    def _mlp_params(self, dff: int) -> int:
+        mult = 3 if self.act in ("swiglu", "geglu") else 2
+        return mult * self.d_model * dff
+
+    def _expert_params(self) -> int:
+        return self._mlp_params(self.expert_d_ff)
+
+    def _block_params(self, kind: str) -> int:
+        d = self.d_model
+        norms = 2 * d
+        if kind in ("G", "L"):
+            mix = self._attn_params()
+        elif kind == "R":
+            dr = int(self.rglru_expand * d)
+            # in/out proj x2 (gated), conv, rg-lru gates
+            mix = 2 * d * dr + dr * d + self.rglru_conv * dr + 2 * dr * dr // 8 + 2 * dr
+        elif kind == "M":
+            di = self.ssm_expand * d
+            nh = di // self.ssm_head_dim
+            # in_proj -> [z, x, B, C, dt], conv over (x,B,C), out_proj
+            mix = d * (2 * di + 2 * self.ssm_state + nh) + self.ssm_conv * (
+                di + 2 * self.ssm_state
+            ) + di * d + 2 * nh
+        else:
+            raise ValueError(kind)
+        if self.n_experts > 0 and kind in ("G", "L"):
+            ff = self.n_experts * self._expert_params() + d * self.n_experts
+        else:
+            ff = self._mlp_params(self.d_ff) if kind in ("G", "L") else self._mlp_params(self.d_ff)
+        # SSM blocks in pure-SSM models have no separate MLP (Mamba-2 style)
+        if kind == "M":
+            ff = 0
+            norms = d
+        return mix + ff + norms
+
+    def validate(self) -> "ModelConfig":
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0, "GQA group mismatch"
+        if "M" in self.pattern:
+            assert (self.ssm_expand * self.d_model) % self.ssm_head_dim == 0
+        if self.n_experts:
+            assert 0 < self.top_k <= self.n_experts
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned workload shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+    # gradient accumulation micro-batches for train mode (DropCompute's M)
+    microbatches: int = 8
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=64)
+def _exact_param_count(cfg: "ModelConfig") -> int:
+    import jax  # local: keep config importable without tracing
+
+    from . import model as _model  # lazy: avoids import cycle
+
+    abs_params = jax.eval_shape(lambda: _model.init_params(jax.random.PRNGKey(0), cfg))
+    n = 0
+    for leaf in jax.tree.leaves(abs_params):
+        k = 1
+        for d in leaf.shape:
+            k *= d
+        n += k
+    return n
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train", microbatches=8),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}

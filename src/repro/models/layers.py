@@ -1,0 +1,510 @@
+"""Core neural layers: norms, RoPE, GQA attention (global/sliding), MLPs.
+
+Pure-functional: every layer is ``init_*(rng, cfg) -> params`` plus an
+``apply`` function.  Parameters are stored in ``cfg.param_dtype`` and cast
+to ``cfg.dtype`` at use (bf16 compute, fp32 master — the TPU-native recipe).
+
+Sharding is *not* baked in here; ``repro.dist.sharding`` assigns logical
+axes to parameters by path-pattern and maps them onto the device mesh.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, shape, in_axis: int = 0, scale: float = 1.0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (matches common LLM practice)."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else math.prod(
+        shape[a] for a in in_axis
+    )
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    p = {"scale": jnp.ones((cfg.d_model,), cfg.params_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), cfg.params_dtype)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig, eps: float = 1e-6):
+    # Statistics in fp32, elementwise math in the compute dtype: avoids a
+    # full fp32 image of x that XLA would otherwise hoist out of the layer
+    # scan and stack across layers (observed: +12 GiB/device at 94L).
+    if cfg.norm == "rmsnorm":
+        ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+        return x * inv * p["scale"].astype(x.dtype)
+    mu = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32) - mu), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x.astype(jnp.float32) - mu) * inv
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x, scale, eps: float = 1e-6):
+    """Per-head RMS norm for QK-norm (Qwen3-style)."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, global or sliding-window, optional bias/QK-norm/softcap)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(rng, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), dtype=cfg.params_dtype),
+        "wk": dense_init(ks[1], (d, kv, hd), dtype=cfg.params_dtype),
+        "wv": dense_init(ks[2], (d, kv, hd), dtype=cfg.params_dtype),
+        "wo": dense_init(ks[3], (h, hd, d), in_axis=(0, 1), dtype=cfg.params_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), cfg.params_dtype)
+        p["bk"] = jnp.zeros((kv, hd), cfg.params_dtype)
+        p["bv"] = jnp.zeros((kv, hd), cfg.params_dtype)
+    if cfg.use_qk_norm:
+        p["q_norm"] = jnp.ones((cfg.hd,), cfg.params_dtype)
+        p["k_norm"] = jnp.ones((cfg.hd,), cfg.params_dtype)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, positions):
+    cd = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if cfg.use_qk_norm:
+        q = rms_head_norm(q, p["q_norm"])
+        k = rms_head_norm(k, p["k_norm"])
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def sdpa(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: Optional[jnp.ndarray],
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Reference scaled-dot-product attention with GQA head expansion.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, KV, D); mask broadcastable to
+    (B, H, Sq, Sk) (True = attend).  The Pallas flash kernel in
+    ``repro.kernels`` is the TPU hot-path replacement; this jnp path is the
+    oracle and the CPU/dry-run path.
+    """
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qh = q.reshape(b, sq, kvh, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qh.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits / math.sqrt(d)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if mask is not None:
+        m = mask.reshape(b, kvh, g, *mask.shape[-2:]) if mask.shape[1] == h else mask[:, :, None]
+        logits = jnp.where(m, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def sdpa_flash(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Double-blocked online-softmax attention (XLA-level flash).
+
+    ``lax.map`` over query chunks (each chunk ``jax.checkpoint``-ed so
+    backward recomputes logits instead of saving them) with an inner
+    ``lax.scan`` over KV chunks maintaining the running max/sum.  Memory is
+    O(q_chunk * k_chunk) per step instead of O(Sq * Sk) — required for the
+    prefill_32k / long_500k shapes and for fp32-logit training at 4k.
+    This is the same decomposition the Pallas kernel
+    (repro.kernels.flash_attention) implements natively on TPU.
+    """
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+
+    pad_q = (-sq) % q_chunk
+    pad_k = (-sk) % k_chunk
+    qg = q.reshape(b, sq, kvh, g, d).astype(jnp.float32) / math.sqrt(d)
+    if pad_q:
+        qg = jnp.pad(qg, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    nq = (sq + pad_q) // q_chunk
+    nk = (sk + pad_k) // k_chunk
+    kc = jnp.moveaxis(kp.reshape(b, nk, k_chunk, kvh, d), 1, 0)
+    vc = jnp.moveaxis(vp.reshape(b, nk, k_chunk, kvh, d), 1, 0)
+
+    def one_q_chunk(qi):
+        q_c = jax.lax.dynamic_slice_in_dim(qg, qi * q_chunk, q_chunk, axis=1)
+        qpos = qi * q_chunk + jnp.arange(q_chunk) + (sk - sq)  # right-aligned
+
+        def body(carry, xs):
+            acc, m_prev, l_prev, c = carry
+            k_c, v_c = xs
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_c, k_c.astype(jnp.float32))
+            if softcap > 0:
+                logits = softcap * jnp.tanh(logits / softcap)
+            kpos = c * k_chunk + jnp.arange(k_chunk)
+            mask = kpos[None, :] < sk  # mask K padding
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_cur = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+            alpha = jnp.exp(m_prev - m_cur)
+            p = jnp.exp(logits - m_cur[..., None])
+            l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_c.astype(jnp.float32)
+            )
+            return (acc, m_cur, l_cur, c + 1), None
+
+        acc0 = jnp.zeros((b, kvh, g, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, kvh, g, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        (acc, m, l, _), _ = jax.lax.scan(body, (acc0, m0, l0, 0), (kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)  # (b, q_chunk, kvh, g, d)
+
+    outs = jax.lax.map(jax.checkpoint(one_q_chunk), jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq + pad_q, h, d)
+    if pad_q:
+        out = out[:, :sq]
+    return out.astype(q.dtype)
+
+
+def sdpa_local_banded(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    window: int,
+    block: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Sliding-window attention as a banded block computation.
+
+    Each query block of size ``block`` attends only to keys in
+    [i*block - window, i*block + block) — compute O(Sq * (window+block))
+    instead of O(Sq * Sk).  This is the sub-quadratic structure that lets
+    SWA architectures run the long-context shapes.
+    """
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    block = block or min(window, sq)
+    n_blocks = sq // block
+    assert n_blocks * block == sq, (sq, block)
+    band = window + block  # keys visible to one query block
+
+    qg = q.reshape(b, n_blocks, block, kvh, g, d).astype(jnp.float32) / math.sqrt(d)
+    # left-pad keys/values by `window` so every block slice is in-range
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+
+    def blk(i, q_b):
+        # keys for block i: padded positions [i*block, i*block + band)
+        k_b = jax.lax.dynamic_slice_in_dim(kp, i * block, band, axis=1)
+        v_b = jax.lax.dynamic_slice_in_dim(vp, i * block, band, axis=1)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_b, k_b.astype(jnp.float32))
+        if softcap > 0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        qpos = i * block + jnp.arange(block)
+        kpos = i * block - window + jnp.arange(band)  # absolute (pad offset)
+        mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] > qpos[:, None] - window) & (
+            kpos[None, :] >= 0
+        )
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v_b.astype(jnp.float32))
+        return out.reshape(b, block, h, d)
+
+    outs = jax.lax.map(jax.checkpoint(lambda i: blk(i, qg[:, i])), jnp.arange(n_blocks))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, d).astype(q.dtype)
+
+
+# Sequence length above which the memory-efficient paths kick in.
+_CHUNKED_THRESHOLD = 2048
+
+
+def _pad_heads_for_tp(q, k, v):
+    """Pad-and-shard attention heads when they don't divide the TP axis.
+
+    GSPMD requires even sharding, so architectures with e.g. 14 heads on a
+    16-way model axis would otherwise run attention fully REPLICATED on the
+    model axis (measured: ~11x useful-ratio loss on internvl2).  Instead:
+    expand the KV heads to full MHA, zero-pad the head dim to the next
+    model-axis multiple, and constrain heads onto the model axis — 1.14x
+    padded compute replaces 16x replication.  Training path only (decode
+    keeps GQA's small KV cache).  Returns (q, k, v, real_heads) with
+    possibly padded head dims; caller slices the output back.
+    """
+    from .moe import _current_mesh  # lazy import (cycle)
+
+    mesh = _current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return q, k, v, q.shape[2]
+    tp = mesh.shape["model"]
+    h, kvh = q.shape[2], k.shape[2]
+    if tp <= 1 or h % tp == 0:
+        return q, k, v, h
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    g = h // kvh
+    k = jnp.repeat(k, g, axis=2)  # expand KV -> full heads
+    v = jnp.repeat(v, g, axis=2)
+    h2 = -(-h // tp) * tp
+    pad = h2 - h
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    while dp and q.shape[0] % n != 0:
+        dp = dp[1:]
+        n = max(n // mesh.shape.get(dp[0] if dp else "", 1), 1)
+    spec = NamedSharding(mesh, P(dp if dp else None, None, "model", None))
+    q = jax.lax.with_sharding_constraint(q, spec)
+    k = jax.lax.with_sharding_constraint(k, spec)
+    v = jax.lax.with_sharding_constraint(v, spec)
+    return q, k, v, h
+
+
+def causal_mask(sq: int, sk: int, q_offset=0, window: int = 0) -> jnp.ndarray:
+    """(1, 1, Sq, Sk) boolean mask; window>0 = sliding window."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m = m & (kpos > qpos - window)
+    return m[None, None]
+
+
+def apply_attention(
+    p,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    kind: str,
+    positions: jnp.ndarray,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    decode_pos: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """One attention block application.
+
+    kind: 'G' (global causal), 'L' (sliding window causal), 'B'
+    (bidirectional, encoder), 'X' (cross-attention; uses cross_kv as K/V).
+
+    cache (decode mode): {"k": (B, L, KV, D), "v": ...} — pre-allocated
+    ring/linear buffer; this function writes the current token's K/V at
+    ``decode_pos`` and attends over valid entries.
+    """
+    cd = cfg.compute_dtype
+    window = cfg.sliding_window if kind == "L" else 0
+
+    if kind == "X":
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(cd)
+        k, v = cross_kv
+        if q.shape[1] > _CHUNKED_THRESHOLD:
+            out = sdpa_flash(q, k, v, causal=False, softcap=cfg.logit_softcap)
+        else:
+            out = sdpa(q, k, v, None, cfg.logit_softcap)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+        return y, cache
+
+    q, k, v = _qkv(p, x, cfg, positions)
+
+    if cache is None:
+        sq = x.shape[1]
+        q, k, v, real_h = _pad_heads_for_tp(q, k, v)
+        if kind == "L" and sq > 2 * window and sq % min(window, sq) == 0:
+            out = sdpa_local_banded(q, k, v, window, softcap=cfg.logit_softcap)
+        elif sq > _CHUNKED_THRESHOLD:
+            out = sdpa_flash(q, k, v, causal=(kind != "B"), softcap=cfg.logit_softcap)
+        else:
+            if kind == "B":
+                mask = None
+            else:
+                mask = causal_mask(sq, sq, window=window)
+            out = sdpa(q, k, v, mask, cfg.logit_softcap)
+        if out.shape[2] != real_h:
+            out = out[:, :, :real_h]
+    else:
+        # Decode: write K/V at cache position, attend over the buffer.
+        # decode_pos is a scalar (lockstep batch) or (B,) per-slot vector
+        # (continuous batching: every sequence at its own position).
+        buf_len = cache["k"].shape[1]
+        pos = jnp.asarray(decode_pos)
+        kpos_idx = jnp.arange(buf_len)
+        if pos.ndim == 0:
+            slot = pos % buf_len if window > 0 else pos
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            pos_b = pos[None]  # (1,) broadcasts over batch below
+            slot_b = slot[None]
+        else:
+            slot_b = pos % buf_len if window > 0 else pos  # (B,)
+            bidx = jnp.arange(q.shape[0])
+            ck = cache["k"].at[bidx, slot_b].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, slot_b].set(v[:, 0].astype(cache["v"].dtype))
+            pos_b = pos
+        if window > 0:
+            # ring buffer: reconstruct each entry's absolute position.
+            abs_pos = jnp.where(
+                kpos_idx[None, :] <= slot_b[:, None],
+                pos_b[:, None] - slot_b[:, None] + kpos_idx[None, :],
+                pos_b[:, None] - slot_b[:, None] - buf_len + kpos_idx[None, :],
+            )
+            valid = (abs_pos >= jnp.maximum(pos_b[:, None] - window + 1, 0)) & (
+                abs_pos <= pos_b[:, None]
+            )
+        else:
+            valid = kpos_idx[None, :] <= pos_b[:, None]  # (B or 1, L)
+        mask = valid[:, None, None, :]
+        out = sdpa(q, ck.astype(cd), cv.astype(cd), mask, cfg.logit_softcap)
+        cache = {"k": ck, "v": cv}
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    return y, cache
+
+
+def init_attention_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int):
+    """Pre-allocated decode cache for one attention layer."""
+    buf = min(cfg.sliding_window, seq_len) if kind == "L" else seq_len
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, buf, kv, hd), cfg.compute_dtype),
+        "v": jnp.zeros((batch, buf, kv, hd), cfg.compute_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    p = {"w_out": dense_init(ks[2], (f, d), dtype=cfg.params_dtype)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[0], (d, f), dtype=cfg.params_dtype)
+        p["w_in"] = dense_init(ks[1], (d, f), dtype=cfg.params_dtype)
+    else:
+        p["w_in"] = dense_init(ks[1], (d, f), dtype=cfg.params_dtype)
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    cd = cfg.compute_dtype
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cd))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(cd))
+        act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(cd)))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(cd))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(rng, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    p = {"embedding": dense_init(rng, (cfg.vocab_size, cfg.d_model), in_axis=1, dtype=cfg.params_dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(
+            jax.random.fold_in(rng, 1), (cfg.d_model, cfg.vocab_size), dtype=cfg.params_dtype
+        )
+    if cfg.pos == "learned":
+        p["pos_embedding"] = dense_init(
+            jax.random.fold_in(rng, 2), (8192, cfg.d_model), in_axis=1, dtype=cfg.params_dtype
+        )
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig, positions=None):
+    x = jnp.take(p["embedding"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.family != "ssm":
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.pos == "learned" and positions is not None:
+        pe = jnp.take(p["pos_embedding"], positions % p["pos_embedding"].shape[0], axis=0)
+        x = x + pe.astype(cfg.compute_dtype)
+    return x
+
+
+def unembed(p, x, cfg: ModelConfig):
+    w = p.get("unembed")
+    if w is None:
+        w = p["embedding"].T
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(cfg.compute_dtype))

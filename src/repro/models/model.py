@@ -1,0 +1,290 @@
+"""Public model API: init / forward / loss / decode, for every family.
+
+    params = init_params(rng, cfg)
+    logits, aux = forward(params, cfg, batch)           # train / prefill
+    loss_sum, w = loss_fn(params, cfg, batch)           # DropCompute GradFn
+    cache = init_decode_cache(params, cfg, batch, L)    # serving
+    logits, cache = decode_step(params, cfg, cache, tok, pos)
+
+``batch`` is a dict with (family-dependent):
+    tokens   (B, S) int32          — always
+    weights  (B, S) float          — per-token loss weights (0 = pad/prefix)
+    prefix   (B, P, d) bf16        — VLM patch embeddings (stub frontend)
+    frames   (B, F, d) bf16        — audio encoder frames (stub frontend)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from .transformer import (
+    apply_block,
+    apply_stack,
+    init_block,
+    init_block_cache,
+    init_stack,
+    init_stack_cache,
+)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng, cfg: ModelConfig) -> PyTree:
+    cfg.validate()
+    ks = jax.random.split(rng, 8)
+    p: Dict[str, PyTree] = {
+        "embed": L.init_embedding(ks[0], cfg),
+        "stack": init_stack(ks[1], cfg),
+        "final_norm": L.init_norm(cfg),
+    }
+    if cfg.is_encdec:
+        p["encoder"] = {
+            "blocks": [init_block(jax.random.fold_in(ks[2], i), cfg, "B") for i in range(cfg.enc_layers)],
+            "final_norm": L.init_norm(cfg),
+            "pos_embedding": L.dense_init(ks[3], (cfg.enc_seq, cfg.d_model), in_axis=1, dtype=cfg.params_dtype),
+        }
+        # decoder cross-attention blocks replace the plain stack
+        p["stack"] = {
+            "groups": (),
+            "tail": [
+                init_block(jax.random.fold_in(ks[4], i), cfg, "G", cross=True)
+                for i in range(cfg.n_layers)
+            ],
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Encoder (audio; the conv/mel frontend is a stub per the assignment)
+# ---------------------------------------------------------------------------
+
+
+def encode(params: PyTree, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, F, d) stub embeddings -> encoder output (B, F, d)."""
+    enc = params["encoder"]
+    x = frames.astype(cfg.compute_dtype)
+    x = x + enc["pos_embedding"][None, : x.shape[1]].astype(cfg.compute_dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def run(blk_, x_):
+        y, _, _ = apply_block(blk_, x_, cfg, "B", positions)
+        return y
+
+    for blk in enc["blocks"]:
+        x = jax.checkpoint(run, prevent_cse=False)(blk, x) if cfg.remat else run(blk, x)
+    return L.apply_norm(enc["final_norm"], x, cfg)
+
+
+def _cross_kv(blk, enc_out, cfg: ModelConfig):
+    cd = cfg.compute_dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, blk["cross_attn"]["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, blk["cross_attn"]["wv"].astype(cd))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward_features(
+    params: PyTree,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    moe_impl: str = "sort",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (final hidden states (B, S_text, d), aux_loss scalar)."""
+    tokens = batch["tokens"]
+    positions = jnp.arange(tokens.shape[1])
+
+    if cfg.prefix_len > 0:  # VLM: prepend patch embeddings
+        prefix = batch["prefix"].astype(cfg.compute_dtype)
+        x_text = L.embed(params["embed"], tokens, cfg, positions)
+        x = jnp.concatenate([prefix, x_text], axis=1)
+        positions = jnp.arange(x.shape[1])
+    else:
+        x = L.embed(params["embed"], tokens, cfg, positions)
+
+    if cfg.is_encdec:
+        enc_out = encode(params, cfg, batch["frames"])
+        aux = jnp.zeros((), jnp.float32)
+
+        def run(blk_, x_, enc_):
+            y, _, a_ = apply_block(
+                blk_, x_, cfg, "G", positions, enc_kv=_cross_kv(blk_, enc_, cfg)
+            )
+            return y, a_
+
+        for blk in params["stack"]["tail"]:
+            if cfg.remat:
+                x, a = jax.checkpoint(run, prevent_cse=False)(blk, x, enc_out)
+            else:
+                x, a = run(blk, x, enc_out)
+            aux = aux + a
+    else:
+        x, _, aux = apply_stack(params["stack"], x, cfg, positions, moe_impl=moe_impl)
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    if cfg.prefix_len > 0:
+        x = x[:, cfg.prefix_len :]
+    return x, aux
+
+
+def forward(
+    params: PyTree,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    moe_impl: str = "sort",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits (B, S, V), aux_loss scalar)."""
+    x, aux = forward_features(params, cfg, batch, moe_impl=moe_impl)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Loss (sum form, for DropCompute's accumulate_grads)
+# ---------------------------------------------------------------------------
+
+_CE_CHUNK = 1024  # sequence positions per unembed+CE chunk
+
+
+def _ce_sums(params, cfg, x, targets, w):
+    """(loss_sum, weight_sum) from final hiddens; chunked over sequence.
+
+    The unembed logits (B, S, V) in fp32 dominate training memory at large
+    vocabs (several full copies live through the CE backward).  Chunking
+    the positions through a checkpointed map keeps logits transient.
+    """
+    b, s, d = x.shape
+    if s <= _CE_CHUNK:
+        return _ce_once(params, cfg, x, targets, w)
+
+    pad = (-s) % _CE_CHUNK
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    n = (s + pad) // _CE_CHUNK
+    xc = jnp.moveaxis(x.reshape(b, n, _CE_CHUNK, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, n, _CE_CHUNK), 1, 0)
+    wc = jnp.moveaxis(w.reshape(b, n, _CE_CHUNK), 1, 0)
+
+    def one(args):
+        return _ce_once(params, cfg, *args)
+
+    sums = jax.lax.map(jax.checkpoint(one), (xc, tc, wc))
+    return jnp.sum(sums[0]), jnp.sum(sums[1])
+
+
+def _ce_once(params, cfg, x, targets, w):
+    logits = L.unembed(params["embed"], x, cfg).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum((lse - tgt) * w), jnp.sum(w)
+
+
+def loss_fn(
+    params: PyTree,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    moe_impl: str = "sort",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Next-token CE. Returns (loss_sum, token_weight_sum)."""
+    x, aux = forward_features(params, cfg, batch, moe_impl=moe_impl)
+    targets = batch["tokens"][:, 1:]
+    w = batch.get("weights")
+    w = jnp.ones_like(targets, jnp.float32) if w is None else w[:, 1:].astype(jnp.float32)
+    loss_sum, w_sum = _ce_sums(params, cfg, x[:, :-1], targets, w)
+    loss_sum = loss_sum + cfg.router_aux_weight * aux * w_sum
+    return loss_sum, w_sum
+
+
+def per_token_losses(params, cfg, batch, moe_impl: str = "sort"):
+    """(B, S-1) CE and weights — for the per-example-weight SPMD step."""
+    logits, aux = forward(params, cfg, batch, moe_impl=moe_impl)
+    targets = batch["tokens"][:, 1:]
+    w = batch.get("weights")
+    w = jnp.ones_like(targets, jnp.float32) if w is None else w[:, 1:].astype(jnp.float32)
+    lg = logits[:, :-1].astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    tgt = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    return lse - tgt, w, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(
+    params: PyTree,
+    cfg: ModelConfig,
+    batch: int,
+    seq_len: int,
+    enc_out: Optional[jnp.ndarray] = None,
+) -> PyTree:
+    if cfg.is_encdec:
+        # the enc-dec decoder stack is tail-only (see init_params): its
+        # cache must mirror that structure, not the grouped-scan layout
+        assert enc_out is not None, "enc-dec decode needs encoder output"
+        cache: Dict[str, PyTree] = {
+            "stack": {
+                "groups": (),
+                "tail": [
+                    init_block_cache(cfg, "G", batch, seq_len)
+                    for _ in range(cfg.n_layers)
+                ],
+            },
+            "cross_kv": [
+                _cross_kv(blk, enc_out, cfg) for blk in params["stack"]["tail"]
+            ],
+        }
+        return cache
+    return {"stack": init_stack_cache(cfg, batch, seq_len)}
+
+
+def decode_step(
+    params: PyTree,
+    cfg: ModelConfig,
+    cache: PyTree,
+    token: jnp.ndarray,  # (B, 1) int32
+    pos: jnp.ndarray,  # scalar int32, or (B,) per-slot positions
+    moe_impl: str = "dense",
+) -> Tuple[jnp.ndarray, PyTree]:
+    pos = jnp.asarray(pos)
+    positions = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
+    x = L.embed(params["embed"], token, cfg, positions)
+
+    if cfg.is_encdec:
+        new_tail = []
+        for blk, c, kv in zip(
+            params["stack"]["tail"], cache["stack"]["tail"], cache["cross_kv"]
+        ):
+            x, nc, _ = apply_block(
+                blk, x, cfg, "G", positions, c, decode_pos=pos, enc_kv=kv
+            )
+            new_tail.append(nc)
+        new_cache = {
+            "stack": {"groups": cache["stack"]["groups"], "tail": new_tail},
+            "cross_kv": cache["cross_kv"],
+        }
+    else:
+        x, new_stack, _ = apply_stack(
+            params["stack"], x, cfg, positions, cache["stack"],
+            decode_pos=pos, moe_impl=moe_impl,
+        )
+        new_cache = {"stack": new_stack}
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, new_cache

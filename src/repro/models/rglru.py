@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma)  [arXiv:2402.19427].
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(w_a * x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(w_x * x_t + b_x)          (input gate)
+    a_t = a ** (c * r_t),  a = sigmoid(lam) (per-channel decay, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+TPU adaptation: the linear recurrence is evaluated with
+``jax.lax.associative_scan`` (log-depth, maps well to TPU vector units)
+instead of a GPU-style sequential kernel.  Gates use per-channel (diagonal)
+weights — Griffin's block-diagonal gate matrices reduced to their diagonal;
+noted in DESIGN.md §Hardware-adaptation.
+
+Decode carries (h, conv_state) => O(1) per token, which is what lets the
+hybrid recurrentgemma run ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+_C = 8.0
+
+
+def init_rglru(rng, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    dr = int(cfg.rglru_expand * d)
+    ks = jax.random.split(rng, 4)
+    return {
+        "w_branch": dense_init(ks[0], (d, dr), dtype=cfg.params_dtype),
+        "w_gate_branch": dense_init(ks[1], (d, dr), dtype=cfg.params_dtype),
+        "conv_w": dense_init(ks[2], (cfg.rglru_conv, dr), in_axis=0, dtype=cfg.params_dtype),
+        "conv_b": jnp.zeros((dr,), cfg.params_dtype),
+        "gate_a_w": jnp.zeros((dr,), cfg.params_dtype),
+        "gate_a_b": jnp.zeros((dr,), cfg.params_dtype),
+        "gate_x_w": jnp.zeros((dr,), cfg.params_dtype),
+        "gate_x_b": jnp.zeros((dr,), cfg.params_dtype),
+        # lambda init so that a = sigmoid(lam) spans (0.9, 0.999)
+        "lam": jnp.linspace(2.2, 6.9, dr).astype(cfg.params_dtype),
+        "w_out": dense_init(ks[3], (dr, d), dtype=cfg.params_dtype),
+    }
+
+
+def _conv(x, w, b, state=None):
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : xp.shape[1] - (k - 1) + i] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1) :]
+    return out + b, new_state
+
+
+def _rglru_scan(x, r, i, a_param):
+    """Linear recurrence via associative scan. x/r/i: (B, S, Dr) fp32."""
+    log_a = -_C * r * jax.nn.softplus(-a_param)  # log(a^(c r)), a=sigmoid(lam)
+    a_t = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a_t**2, 1e-12)) * (i * x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_all, h = jax.lax.associative_scan(combine, (a_t, gated), axis=1)
+    return h
+
+
+def apply_rglru(
+    p,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    cd = cfg.compute_dtype
+    u = jnp.einsum("bsd,de->bse", x, p["w_branch"].astype(cd))
+    g = jnp.einsum("bsd,de->bse", x, p["w_gate_branch"].astype(cd))
+
+    if cache is None:
+        u, _ = _conv(u, p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+        uf = u.astype(jnp.float32)
+        r = jax.nn.sigmoid(uf * p["gate_a_w"].astype(jnp.float32) + p["gate_a_b"].astype(jnp.float32))
+        i = jax.nn.sigmoid(uf * p["gate_x_w"].astype(jnp.float32) + p["gate_x_b"].astype(jnp.float32))
+        h = _rglru_scan(uf, r, i, p["lam"].astype(jnp.float32))
+        new_cache = None
+    else:
+        u, conv_state = _conv(u, p["conv_w"].astype(cd), p["conv_b"].astype(cd), cache["conv"])
+        uf = u.astype(jnp.float32)
+        r = jax.nn.sigmoid(uf * p["gate_a_w"].astype(jnp.float32) + p["gate_a_b"].astype(jnp.float32))
+        i = jax.nn.sigmoid(uf * p["gate_x_w"].astype(jnp.float32) + p["gate_x_b"].astype(jnp.float32))
+        log_a = -_C * r * jax.nn.softplus(-p["lam"].astype(jnp.float32))
+        a_t = jnp.exp(log_a)
+        h = a_t * cache["h"][:, None] + jnp.sqrt(jnp.maximum(1.0 - a_t**2, 1e-12)) * (i * uf)
+        new_cache = {"conv": conv_state, "h": h[:, 0]}
+
+    y = h.astype(cd) * jax.nn.gelu(g)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(cd)), new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    dr = int(cfg.rglru_expand * cfg.d_model)
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru_conv - 1, dr), cfg.compute_dtype),
+        "h": jnp.zeros((batch, dr), jnp.float32),
+    }

@@ -1,0 +1,193 @@
+"""Mamba-2 / SSD (state-space duality) block  [arXiv:2405.21060].
+
+TPU-native adaptation of the SSD algorithm: the sequence is split into
+chunks; within a chunk the recurrence is materialized as a (masked,
+decay-weighted) attention-like matmul that feeds the MXU, and across
+chunks a small recurrence over per-chunk states runs as a ``lax.scan``
+(chunk count is seq/chunk, so the serial dimension is short).  This is the
+standard SSD decomposition — quadratic-in-chunk, linear-in-sequence.
+
+Decode maintains the SSM state (B, H, P, N) and a causal-conv ring state,
+giving O(1) per-token cost (the reason mamba2 runs the ``long_500k``
+shape).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def init_ssd(rng, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    ks = jax.random.split(rng, 4)
+    conv_ch = di + 2 * n
+    return {
+        # in_proj packs [z (gate), x, B, C, dt] like the reference impl.
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * n + nh), dtype=cfg.params_dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_ch), in_axis=0, dtype=cfg.params_dtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.params_dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(cfg.params_dtype),
+        "dt_bias": jnp.zeros((nh,), cfg.params_dtype),
+        "d_skip": jnp.ones((nh,), cfg.params_dtype),
+        "norm_scale": jnp.ones((di,), cfg.params_dtype),
+        "w_out": dense_init(ks[3], (di, d), dtype=cfg.params_dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt, di, n, nh
+
+
+def _causal_conv(xbc, w, b, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d; state=(B, K-1, C) carries decode history."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+        xp = jnp.concatenate([pad, xbc], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(xbc.dtype), xbc], axis=1)
+    out = sum(xp[:, i : xp.shape[1] - (k - 1) + i] * w[i] for i in range(k))
+    out = jax.nn.silu(out + b)
+    new_state = xp[:, -(k - 1) :] if k > 1 else None
+    return out, new_state
+
+
+def _ssd_chunked(x, dt, a, b, c, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P)   dt: (B, S, H)   a: (H,) positive decay rates
+    b, c: (B, S, N)   (single group, shared across heads — Mamba-2 default)
+    Returns y: (B, S, H, P).
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    xc = x.reshape(bs, nc, chunk, h, p)
+    dtc = dt.reshape(bs, nc, chunk, h)
+    bc = b.reshape(bs, nc, chunk, n)
+    cc = c.reshape(bs, nc, chunk, n)
+
+    da = dtc * a  # (B, nc, L, H): -dt*a is the log decay per step
+    cum = jnp.cumsum(da, axis=2)  # cumulative log-decay within chunk
+
+    # ---- intra-chunk (quadratic in chunk length; MXU-friendly) ----
+    # decay(i, j) = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,L,L,H)
+    li = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # mask the exponent BEFORE exp: exp of the (positive) upper-triangle
+    # values overflows and poisons the backward through where's 0*inf.
+    decay = jnp.exp(-jnp.where(li, diff, 0.0)) * li
+    scores = jnp.einsum("bgin,bgjn->bgij", cc, bc)  # (B,nc,L,L)
+    att = scores[..., None] * decay * dtc[:, :, None, :, :]  # (B,nc,i,j,H)
+    y_intra = jnp.einsum("bgijh,bgjhp->bgihp", att, xc)
+
+    # ---- chunk states ----
+    tail = cum[:, :, -1:, :] - cum  # decay from step j to chunk end
+    wj = jnp.exp(-tail) * dtc  # (B,nc,L,H)
+    states = jnp.einsum("bgjn,bgjh,bgjhp->bghnp", bc, wj, xc)  # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence over nc chunks ----
+    chunk_decay = jnp.exp(-cum[:, :, -1, :])  # (B,nc,H)
+
+    def scan_body(carry, inp):
+        st, dec = inp  # (B,H,N,P), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    init = jnp.zeros_like(states[:, 0])
+    _, prev_states = jax.lax.scan(
+        scan_body,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,N,P)
+
+    # ---- inter-chunk contribution ----
+    in_decay = jnp.exp(-cum)  # decay from chunk start to step i
+    y_inter = jnp.einsum(
+        "bgin,bgih,bghnp->bgihp", cc, in_decay, prev_states
+    )
+    y = (y_intra + y_inter).reshape(bs, s, h, p)
+    return y
+
+
+def apply_ssd(
+    p,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """One Mamba-2 block. x: (B, S, D). cache => single-token decode."""
+    cd = cfg.compute_dtype
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(cd))
+    z, xbc, dt, di, n, nh = _split_proj(cfg, proj)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(p["a_log"].astype(jnp.float32))  # (H,) positive rates
+
+    if cache is None:
+        xbc, _ = _causal_conv(xbc, p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+        xs, b, c = jnp.split(xbc, [di, di + n], axis=-1)
+        xh = xs.reshape(*xs.shape[:2], nh, cfg.ssm_head_dim)
+        s = xh.shape[1]
+        pad = (-s) % cfg.ssm_chunk  # tail pad: dt=0 => identity decay, no update
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        else:
+            dt_p, b_p, c_p = dt, b, c
+        y = _ssd_chunked(
+            xh.astype(jnp.float32), dt_p, a,
+            b_p.astype(jnp.float32), c_p.astype(jnp.float32), cfg.ssm_chunk,
+        )
+        if pad:
+            y = y[:, :s]
+            xh = xh[:, :s]
+        new_cache = None
+    else:
+        conv_out, conv_state = _causal_conv(
+            xbc, p["conv_w"].astype(cd), p["conv_b"].astype(cd), cache["conv"]
+        )
+        xs, b, c = jnp.split(conv_out, [di, di + n], axis=-1)
+        xh = xs.reshape(xs.shape[0], 1, nh, cfg.ssm_head_dim).astype(jnp.float32)
+        bf = b.astype(jnp.float32)[:, 0]
+        cf = c.astype(jnp.float32)[:, 0]
+        dt1 = dt[:, 0]  # (B, H)
+        decay = jnp.exp(-dt1 * a)  # (B, H)
+        # state: (B, H, N, P)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", bf, dt1, xh[:, 0])
+        state = cache["state"] * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", cf, state)[:, None]  # (B,1,H,P)
+        new_cache = {"conv": conv_state, "state": state}
+
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(*y.shape[:2], di)
+    # gated RMSNorm (Mamba-2 places the norm after gating by z)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = (y * p["norm_scale"].astype(jnp.float32)).astype(cd)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(cd)), new_cache
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    di = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), cfg.compute_dtype),
+        "state": jnp.zeros((batch, nh, n, cfg.ssm_head_dim), jnp.float32),
+    }

@@ -1,0 +1,202 @@
+"""Optimizers built from scratch in JAX (no optax in this environment).
+
+Implements the optimizers the paper trains with:
+  * LAMB  [You et al. 2019]      — BERT-Large generalization runs (§5.1)
+  * LANS  [Zheng et al. 2020]    — BERT-1.5B runtime runs (§5.2 / B.1)
+  * AdamW, SGD(+momentum)        — baselines / ResNet runs
+
+API mirrors optax: ``opt.init(params) -> state``,
+``opt.update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates``.  All states are pytrees so they shard under pjit like
+the parameters themselves (ZeRO-1/3 falls out of the sharding rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., Tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr: Callable | float, momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr_t = lr(count) if callable(lr) else lr
+        mu = jax.tree.map(
+            lambda m, g, p: momentum * m + g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32),
+            state["mu"], grads, params,
+        )
+        upd = jax.tree.map(lambda m: -lr_t * m, mu)
+        return upd, {"mu": mu, "count": count}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _adam_moments(grads, state, b1, b2):
+    # math in fp32, storage in the state's dtype (bf16 state halves the
+    # per-device optimizer bytes for >100B models on 16 GB chips)
+    m = jax.tree.map(
+        lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)),
+        state["m"], grads,
+    )
+    v = jax.tree.map(
+        lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g.astype(jnp.float32))),
+        state["v"], grads,
+    )
+    return m, v
+
+
+def _store(moments, like):
+    return jax.tree.map(lambda x, l: x.astype(l.dtype), moments, like)
+
+
+def _moment_init(params, state_dtype=jnp.float32):
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros_like(p, state_dtype), params),
+        "v": jax.tree.map(lambda p: jnp.zeros_like(p, state_dtype), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw(
+    lr: Callable | float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr_t = lr(count) if callable(lr) else lr
+        m, v = _adam_moments(grads, state, b1, b2)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def u(m_, v_, p):
+            mh = m_ / bc1
+            vh = v_ / bc2
+            return -lr_t * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32))
+
+        upd = jax.tree.map(u, m, v, params)
+        state = {"m": _store(m, state["m"]), "v": _store(v, state["v"]), "count": count}
+        return upd, state
+
+    return Optimizer(lambda p: _moment_init(p, state_dtype), update)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _trust_ratio(p, u, min_norm: float = 1e-8):
+    pn = jnp.linalg.norm(p.astype(jnp.float32).reshape(-1))
+    un = jnp.linalg.norm(u.reshape(-1))
+    ratio = jnp.where((pn > min_norm) & (un > min_norm), pn / un, 1.0)
+    return ratio
+
+
+def lamb(
+    lr: Callable | float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+) -> Optimizer:
+    """LAMB [You et al. 2019]: Adam direction rescaled by the layerwise
+    trust ratio ||p|| / ||update||."""
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr_t = lr(count) if callable(lr) else lr
+        m, v = _adam_moments(grads, state, b1, b2)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def u(m_, v_, p):
+            r = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) + weight_decay * p.astype(jnp.float32)
+            return -lr_t * _trust_ratio(p, r) * r
+
+        upd = jax.tree.map(u, m, v, params)
+        return upd, {"m": m, "v": v, "count": count}
+
+    return Optimizer(_moment_init, update)
+
+
+def lans(
+    lr: Callable | float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+) -> Optimizer:
+    """LANS [Zheng et al. 2020]: Nesterov-style two-part LAMB with
+    gradient normalization — the optimizer of the paper's BERT-1.5B runs."""
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr_t = lr(count) if callable(lr) else lr
+        # gradient normalization (per-layer)
+        grads = jax.tree.map(
+            lambda g: g.astype(jnp.float32)
+            / (jnp.linalg.norm(g.astype(jnp.float32).reshape(-1)) + 1e-9),
+            grads,
+        )
+        m, v = _adam_moments(grads, state, b1, b2)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def u(m_, v_, g, p):
+            pf = p.astype(jnp.float32)
+            denom = jnp.sqrt(v_ / bc2) + eps
+            r_m = (m_ / bc1) / denom + weight_decay * pf
+            r_g = g / denom + weight_decay * pf
+            return -lr_t * (
+                b1 * _trust_ratio(p, r_m) * r_m + (1 - b1) * _trust_ratio(p, r_g) * r_g
+            )
+
+        upd = jax.tree.map(u, m, v, grads, params)
+        return upd, {"m": m, "v": v, "count": count}
+
+    return Optimizer(_moment_init, update)
+
+
+OPTIMIZERS = {"sgd": sgd, "adamw": adamw, "lamb": lamb, "lans": lans}
+
+
+def make(name: str, lr, **kw) -> Optimizer:
+    return OPTIMIZERS[name](lr, **kw)

@@ -1,0 +1,36 @@
+"""Learning-rate schedules (warmup + linear/cosine decay, as in You et al.)."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def warmup_linear(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.0) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((total_steps - step) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        decay = floor + (peak_lr - floor) * frac
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return lr
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.0) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        decay = floor + 0.5 * (peak_lr - floor) * (1.0 + jnp.cos(math.pi * t))
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return lr
+
+
+def constant(lr_value: float) -> Callable:
+    def lr(step):
+        return jnp.asarray(lr_value, jnp.float32)
+
+    return lr

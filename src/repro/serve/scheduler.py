@@ -1,0 +1,120 @@
+"""Continuous-batching serving scheduler.
+
+A fixed pool of B cache slots; requests are admitted into free slots as
+they complete (vLLM-style iteration-level scheduling).  Every engine step
+decodes ONE token for all active slots via the per-slot-position
+``decode_step`` path (each sequence at its own absolute position in its
+own cache rows).  Prefill is streamed through the same decode path
+token-by-token — simple, cache-correct, and shape-stable (one compiled
+program for the whole serving session).
+
+This is the serving-side analogue of DropCompute's scheduling philosophy:
+keep the synchronous engine step, let per-slot state absorb the
+heterogeneity (here: request lengths; there: compute variance).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ModelConfig
+from ..models.model import decode_step, init_decode_cache
+
+PyTree = object
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int
+    output: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0  # next absolute position to write
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class ContinuousBatcher:
+    """Engine: admit / step / drain."""
+
+    def __init__(self, params: PyTree, cfg: ModelConfig, batch_slots: int, max_len: int):
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.cache = init_decode_cache(params, cfg, batch_slots, max_len)
+        self._step = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos, moe_impl="dense")
+        )
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        assert len(req.prompt) + req.max_new_tokens <= self.max_len, "request too long"
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in self.slots:
+            if s.free and self.queue:
+                s.req = self.queue.pop(0)
+                s.pos = 0
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(not s.free for s in self.slots)
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine iteration: feed each active slot its next token."""
+        self._admit()
+        b = len(self.slots)
+        tokens = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.free:
+                continue
+            r = s.req
+            if s.pos < len(r.prompt):  # streaming prefill
+                tokens[i, 0] = r.prompt[s.pos]
+            else:  # decode: feed the last generated token
+                tokens[i, 0] = r.output[-1] if r.output else r.prompt[-1]
+            pos[i] = s.pos
+
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos)
+        )
+        next_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+
+        for i, s in enumerate(self.slots):
+            if s.free:
+                continue
+            r = s.req
+            s.pos += 1
+            if s.pos >= len(r.prompt):  # this step produced a new token
+                r.output.append(int(next_tok[i]))
+            if r.done or s.pos >= self.max_len:
+                self.finished[r.uid] = r
+                s.req = None  # slot becomes available next step
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        steps = 0
+        while self.busy and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

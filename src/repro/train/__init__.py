@@ -1,0 +1,4 @@
+from . import checkpoint
+from .trainer import TrainConfig, TrainResult, train
+
+__all__ = ["checkpoint", "TrainConfig", "TrainResult", "train"]

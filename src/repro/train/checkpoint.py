@@ -1,0 +1,77 @@
+"""Checkpointing: pytree save/restore with step metadata.
+
+npz-based (offline environment; no orbax).  Arrays are saved host-local;
+in a multi-host deployment each process saves its addressable shards under
+a process-indexed name — the seam is ``shard_suffix``.  Restore validates
+structure and shapes against a template pytree.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz can't store ml_dtypes
+            arr = arr.view(np.uint16)
+        out[key] = arr
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save(path: str, tree: PyTree, step: int, extra: Optional[dict] = None, shard_suffix: str = ""):
+    os.makedirs(path, exist_ok=True)
+    arrays = _flatten(tree)
+    np.savez(os.path.join(path, f"arrays{shard_suffix}.npz"), **arrays)
+    meta = {"step": int(step), "extra": extra or {}, "keys": sorted(arrays)}
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, template: PyTree, shard_suffix: str = "") -> Tuple[PyTree, int]:
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, f"arrays{shard_suffix}.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for pth, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in pth)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        if str(leaf.dtype) == "bfloat16" and arr.dtype == np.uint16:
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != template {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+    return tree, meta["step"]
+
+
+def latest_step(path: str) -> Optional[int]:
+    meta = os.path.join(path, "meta.json")
+    if not os.path.exists(meta):
+        return None
+    with open(meta) as f:
+        return json.load(f)["step"]

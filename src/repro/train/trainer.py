@@ -1,0 +1,164 @@
+"""Training loop with DropCompute as a first-class feature.
+
+The trainer virtualizes N data-parallel workers on whatever devices exist:
+each step draws a (N, M) micro-batch latency tensor from a ``LatencyModel``
+(or records real wall-clock times via HostTimedEngine), derives the
+Algorithm-1 drop mask, and accumulates masked gradients.  Simulated
+iteration time
+
+    T_iter = max_n min(T_n, tau) + T_c
+
+is tracked per step so loss-vs-wallclock curves (paper fig. 5) come out of
+any run.  Threshold selection (Algorithm 2) runs automatically after
+``calibration_steps`` profiling steps when ``drop.tau`` is unset.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dropcompute import DropConfig, accumulate_grads, drop_mask
+from ..core.engine import make_grad_fn
+from ..core.simulate import LatencyModel
+from ..core.threshold import select_threshold
+from ..data.synthetic import DataConfig, microbatches_at
+from ..models import ModelConfig, init_params, loss_fn
+from ..optim import apply_updates, clip_by_global_norm, make as make_opt
+from . import checkpoint as ckpt
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    n_workers: int = 8  # virtual data-parallel workers
+    microbatches: int = 4  # M (gradient accumulations per worker)
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    seed: int = 0
+    # DropCompute
+    drop: DropConfig = dataclasses.field(default_factory=lambda: DropConfig(enabled=False))
+    latency: LatencyModel = dataclasses.field(default_factory=LatencyModel)
+    tc: float = 0.5  # serial/communication seconds per iteration
+    calibration_steps: int = 20  # Algorithm 2 profiling window
+    auto_threshold: bool = False
+    # bookkeeping
+    log_every: int = 10
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: PyTree
+    losses: List[float]
+    sim_times: List[float]  # simulated seconds per iteration
+    drop_fractions: List[float]
+    tau: float
+    metrics: Dict[str, Any]
+
+    @property
+    def cum_time(self) -> np.ndarray:
+        return np.cumsum(self.sim_times)
+
+
+def _make_step(model_cfg: ModelConfig, tcfg: TrainConfig, lr_fn):
+    opt = make_opt(
+        tcfg.optimizer, lr_fn, weight_decay=tcfg.weight_decay
+    ) if tcfg.optimizer != "sgd" else make_opt(tcfg.optimizer, lr_fn)
+    grad_fn = make_grad_fn(lambda p, mb: loss_fn(p, model_cfg, mb))
+
+    def step(params, opt_state, microbatch_stack, mask):
+        grads, loss, stats = accumulate_grads(
+            grad_fn, params, microbatch_stack, mask, tcfg.drop
+        )
+        if tcfg.clip_norm > 0:
+            grads = clip_by_global_norm(grads, tcfg.clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, stats
+
+    return opt, jax.jit(step)
+
+
+def train(
+    model_cfg: ModelConfig,
+    data_cfg: DataConfig,
+    tcfg: TrainConfig,
+    params: Optional[PyTree] = None,
+    eval_fn: Optional[Callable[[PyTree], float]] = None,
+) -> TrainResult:
+    n, m = tcfg.n_workers, tcfg.microbatches
+    total_m = n * m
+    assert data_cfg.batch_size % total_m == 0, (
+        f"global batch {data_cfg.batch_size} must divide into {n} workers x {m} microbatches"
+    )
+
+    if params is None:
+        params = init_params(jax.random.PRNGKey(tcfg.seed), model_cfg)
+    opt, step_fn = _make_step(model_cfg, tcfg, lambda s: tcfg.lr)
+    opt_state = opt.init(params)
+
+    lat_rng = np.random.default_rng(tcfg.seed + 1)
+    tau = tcfg.drop.tau
+    profile: List[np.ndarray] = []
+
+    losses, sim_times, drops = [], [], []
+    for step in range(tcfg.steps):
+        mbs = microbatches_at(step, data_cfg, total_m)
+        mbs = {k: jnp.asarray(v) for k, v in mbs.items() if k != "lengths"}
+
+        # --- latency draws for the N virtual workers (Algorithm 1 input) ---
+        t = tcfg.latency.sample(lat_rng, 1, n, m)[0]  # (N, M)
+        profile.append(t)
+
+        # --- Algorithm 2: pick tau* after the calibration window ---
+        if (
+            tcfg.auto_threshold
+            and tcfg.drop.enabled
+            and not np.isfinite(tau)
+            and step == tcfg.calibration_steps
+        ):
+            prof = np.stack(profile)  # (I, N, M)
+            res = select_threshold(prof, tcfg.tc)
+            tau = res.tau
+
+        # --- drop mask (per worker), flattened onto the microbatch axis ---
+        if tcfg.drop.enabled and np.isfinite(tau):
+            mask_nm = np.asarray(
+                drop_mask(jnp.asarray(t), tau, tcfg.drop.min_microbatches)
+            )
+        else:
+            mask_nm = np.ones((n, m), np.float32)
+        mask = jnp.asarray(mask_nm.reshape(total_m))
+
+        params, opt_state, loss, stats = step_fn(params, opt_state, mbs, mask)
+
+        # --- simulated iteration time (eq. in §4.3) ---
+        t_workers = (t * mask_nm).sum(axis=-1)  # compute actually performed
+        t_iter = float(t_workers.max() + tcfg.tc) if tcfg.drop.enabled and np.isfinite(tau) else float(
+            t.sum(axis=-1).max() + tcfg.tc
+        )
+        losses.append(float(loss))
+        sim_times.append(t_iter)
+        drops.append(1.0 - float(stats["completed_fraction"]))
+
+        if tcfg.ckpt_dir and tcfg.ckpt_every and (step + 1) % tcfg.ckpt_every == 0:
+            ckpt.save(tcfg.ckpt_dir, {"params": params, "opt": opt_state}, step + 1)
+
+    metrics: Dict[str, Any] = {
+        "final_loss": losses[-1] if losses else float("nan"),
+        "mean_drop": float(np.mean(drops)) if drops else 0.0,
+        "total_sim_time": float(np.sum(sim_times)),
+    }
+    if eval_fn is not None:
+        metrics["eval"] = float(eval_fn(params))
+    return TrainResult(params, losses, sim_times, drops, float(tau), metrics)

@@ -1,0 +1,47 @@
+"""Checkpoint save/restore roundtrips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+
+
+def tree():
+    return {
+        "params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3), "b": jnp.ones((3,))},
+        "opt": {"m": [jnp.zeros((2,)), jnp.full((4,), 2.0)], "count": jnp.int32(7)},
+    }
+
+
+class TestRoundtrip:
+    def test_save_restore(self, tmp_path):
+        t = tree()
+        ckpt.save(str(tmp_path), t, step=42, extra={"tau": 1.5})
+        restored, step = ckpt.restore(str(tmp_path), jax.tree.map(jnp.zeros_like, t))
+        assert step == 42
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_latest_step(self, tmp_path):
+        assert ckpt.latest_step(str(tmp_path)) is None
+        ckpt.save(str(tmp_path), tree(), step=5)
+        assert ckpt.latest_step(str(tmp_path)) == 5
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        ckpt.save(str(tmp_path), tree(), step=1)
+        bad = tree()
+        bad["params"]["w"] = jnp.zeros((3, 3))
+        with pytest.raises(ValueError):
+            ckpt.restore(str(tmp_path), bad)
+
+    def test_missing_key_rejected(self, tmp_path):
+        ckpt.save(str(tmp_path), {"a": jnp.ones(2)}, step=1)
+        with pytest.raises(KeyError):
+            ckpt.restore(str(tmp_path), {"a": jnp.ones(2), "b": jnp.ones(2)})
+
+    def test_dtype_preserved_via_template(self, tmp_path):
+        t = {"x": jnp.ones((4,), jnp.bfloat16)}
+        ckpt.save(str(tmp_path), t, step=0)
+        r, _ = ckpt.restore(str(tmp_path), t)
+        assert r["x"].dtype == jnp.bfloat16

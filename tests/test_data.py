@@ -1,0 +1,72 @@
+"""Data pipeline: determinism, packing/padding, length statistics."""
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, DataStream, batch_at, compute_cost_proxy, microbatches_at
+
+
+class TestDeterminism:
+    def test_same_step_same_batch(self):
+        cfg = DataConfig(vocab_size=100, seq_len=32, batch_size=4)
+        b1 = batch_at(7, cfg)
+        b2 = batch_at(7, cfg)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_different_steps_differ(self):
+        cfg = DataConfig(vocab_size=100, seq_len=32, batch_size=4)
+        assert not np.array_equal(batch_at(1, cfg)["tokens"], batch_at(2, cfg)["tokens"])
+
+    def test_worker_shards_differ(self):
+        cfg = DataConfig(vocab_size=100, seq_len=32, batch_size=4)
+        assert not np.array_equal(
+            batch_at(1, cfg, worker=0)["tokens"], batch_at(1, cfg, worker=1)["tokens"]
+        )
+
+    def test_stream_resumable(self):
+        cfg = DataConfig(vocab_size=100, seq_len=16, batch_size=2)
+        s1 = DataStream(cfg)
+        batches = [next(s1) for _ in range(5)]
+        s2 = DataStream(cfg)
+        s2.step = 3
+        np.testing.assert_array_equal(next(s2)["tokens"], batches[3]["tokens"])
+
+
+class TestStrategies:
+    def test_pack_full_weights(self):
+        cfg = DataConfig(vocab_size=100, seq_len=64, batch_size=4, strategy="pack")
+        b = batch_at(0, cfg)
+        assert b["weights"].sum() == 4 * 64
+
+    def test_pad_variable_lengths(self):
+        cfg = DataConfig(vocab_size=100, seq_len=256, batch_size=64, strategy="pad")
+        b = batch_at(0, cfg)
+        lens = b["lengths"]
+        assert lens.min() >= 4 and lens.max() <= 256
+        assert len(np.unique(lens)) > 5  # genuinely variable
+        # weights match lengths
+        np.testing.assert_array_equal(b["weights"].sum(axis=1), lens)
+
+    def test_lognormal_lengths_skewed(self):
+        """Post lengths should be right-skewed (appendix B.1 rationale)."""
+        cfg = DataConfig(vocab_size=100, seq_len=2048, batch_size=512,
+                         strategy="pad", len_mean=180.0, len_sigma=1.0)
+        lens = batch_at(0, cfg)["lengths"].astype(float)
+        assert np.mean(lens) > np.median(lens)
+
+    def test_cost_proxy(self):
+        assert compute_cost_proxy(np.array([64, 64]), 64, "pack") == 1.0
+        assert compute_cost_proxy(np.array([32, 64]), 64, "pad") == pytest.approx(0.75)
+
+
+class TestMicrobatches:
+    def test_reshape_consistent(self):
+        cfg = DataConfig(vocab_size=100, seq_len=16, batch_size=8)
+        full = batch_at(3, cfg)
+        mbs = microbatches_at(3, cfg, m=4)
+        assert mbs["tokens"].shape == (4, 2, 16)
+        np.testing.assert_array_equal(mbs["tokens"].reshape(8, 16), full["tokens"])
+
+    def test_divisibility_enforced(self):
+        cfg = DataConfig(vocab_size=100, seq_len=16, batch_size=8)
+        with pytest.raises(AssertionError):
+            microbatches_at(0, cfg, m=3)

@@ -1,0 +1,98 @@
+"""Pallas kernel validation: interpret-mode sweeps vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def rand(shape, dtype, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,h,kv,s,d", [
+        (1, 4, 4, 128, 64),   # MHA
+        (2, 4, 2, 256, 64),   # GQA
+        (1, 8, 1, 256, 32),   # MQA
+        (2, 2, 2, 384, 128),  # non-pow2 seq multiple of block
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_sweep(self, b, h, kv, s, d, dtype):
+        q = rand((b, h, s, d), dtype, 0)
+        k = rand((b, kv, s, d), dtype, 1)
+        v = rand((b, kv, s, d), dtype, 2)
+        out = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128, interpret=True)
+        expect = ref.flash_attention_ref(q, k, v, causal=True)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=tol
+        )
+
+    @pytest.mark.parametrize("window", [64, 128])
+    def test_sliding_window(self, window):
+        q = rand((1, 4, 256, 64), jnp.float32, 3)
+        k = rand((1, 2, 256, 64), jnp.float32, 4)
+        v = rand((1, 2, 256, 64), jnp.float32, 5)
+        out = ops.flash_attention(q, k, v, causal=True, window=window, interpret=True)
+        expect = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+    def test_non_causal(self):
+        q = rand((1, 2, 128, 64), jnp.float32, 6)
+        k = rand((1, 2, 128, 64), jnp.float32, 7)
+        v = rand((1, 2, 128, 64), jnp.float32, 8)
+        out = ops.flash_attention(q, k, v, causal=False, interpret=True)
+        expect = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+    def test_block_size_invariance(self):
+        q = rand((1, 2, 256, 64), jnp.float32, 9)
+        k = rand((1, 2, 256, 64), jnp.float32, 10)
+        v = rand((1, 2, 256, 64), jnp.float32, 11)
+        o1 = ops.flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+        o2 = ops.flash_attention(q, k, v, block_q=128, block_k=256, interpret=True)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+class TestRmsnorm:
+    @pytest.mark.parametrize("shape", [(4, 128), (3, 17, 256), (1, 1, 1024), (513, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, shape, dtype):
+        x = rand(shape, dtype, 0)
+        s = rand((shape[-1],), jnp.float32, 1)
+        out = ops.rmsnorm(x, s, interpret=True)
+        expect = ref.rmsnorm_ref(x, s)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 1e-6
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=tol
+        )
+
+
+class TestMaskedAccum:
+    @pytest.mark.parametrize("n", [128, 1000, 65536 + 3])
+    @pytest.mark.parametrize("gdtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, n, gdtype):
+        acc = rand((n,), jnp.float32, 0)
+        g = rand((n,), gdtype, 1)
+        for keep in (0.0, 1.0):
+            out = ops.masked_accum(acc, g, jnp.float32(keep), scale=0.125, interpret=True)
+            expect = ref.masked_accum_ref(acc, g, jnp.float32(keep), 0.125)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-6)
+
+    def test_tree_variant(self):
+        accs = {"a": rand((64,), jnp.float32, 2), "b": rand((32, 8), jnp.float32, 3)}
+        gs = {"a": rand((64,), jnp.bfloat16, 4), "b": rand((32, 8), jnp.bfloat16, 5)}
+        out = ops.masked_accum_tree(accs, gs, jnp.float32(1.0), interpret=True)
+        for k in accs:
+            expect = ref.masked_accum_ref(accs[k], gs[k], jnp.float32(1.0))
+            np.testing.assert_allclose(np.asarray(out[k]), np.asarray(expect), atol=1e-6)
+
+    def test_matches_dropcompute_semantics(self):
+        """keep=0 must leave the accumulator untouched (Algorithm 1 line 8)."""
+        acc = rand((257,), jnp.float32, 6)
+        g = rand((257,), jnp.float32, 7)
+        out = ops.masked_accum(acc, g, jnp.float32(0.0), interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(acc))

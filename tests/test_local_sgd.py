@@ -1,0 +1,72 @@
+"""Local-SGD + DropCompute (appendix B.3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.local_sgd import StragglerScenario, localsgd_speedup, localsgd_train
+
+
+class TestRuntimeModel:
+    def test_localsgd_beats_sync_with_stragglers(self):
+        sc = StragglerScenario(mode="uniform", p=0.04, delay=1.0, base=0.1)
+        s, drop = localsgd_speedup(sc, n_workers=32, sync_period=8)
+        assert s > 1.2
+        assert drop == 0.0
+
+    def test_dropcompute_helps_single_server_stragglers(self):
+        """fig. 12 right: one bad host makes Local-SGD behave nearly
+        synchronously; DropCompute recovers the speedup."""
+        sc = StragglerScenario(mode="single_server", p=0.3, delay=1.0, base=0.1, server_size=4)
+        s_plain, _ = localsgd_speedup(sc, n_workers=32, sync_period=8)
+        tau = 8 * 0.1 * 1.6  # cap each period at ~1.6x the clean compute
+        s_drop, drop = localsgd_speedup(sc, n_workers=32, sync_period=8, tau=tau)
+        assert s_drop > s_plain
+        assert 0.0 < drop < 0.2
+
+    def test_longer_period_amortizes_uniform_stragglers(self):
+        sc = StragglerScenario(mode="uniform", p=0.04, delay=1.0, base=0.1)
+        s2, _ = localsgd_speedup(sc, 32, 2)
+        s16, _ = localsgd_speedup(sc, 32, 16)
+        assert s16 > s2
+
+
+class TestFunctionalTrainer:
+    def test_converges_on_quadratic(self):
+        rng = np.random.default_rng(0)
+        w_true = rng.normal(size=(4,)).astype(np.float32)
+
+        def data_fn(r, n):
+            rr = np.random.default_rng(100 * r + n)
+            x = rr.normal(size=(6, 8, 4)).astype(np.float32)  # H=6 local steps
+            y = x @ w_true
+            return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+        def loss(p, mb):
+            return jnp.mean((mb["x"] @ p["w"] - mb["y"]) ** 2)
+
+        p0 = {"w": jnp.zeros((4,), jnp.float32)}
+        final, losses = localsgd_train(loss, p0, data_fn, n_workers=4, rounds=20,
+                                       sync_period=6, lr=0.05)
+        assert losses[-1] < 0.05 * losses[0]
+        np.testing.assert_allclose(np.asarray(final["w"]), w_true, atol=0.1)
+
+    def test_dropped_steps_still_converge(self):
+        """DropCompute on local steps: randomly skip ~20% of local steps —
+        convergence survives (the B.3 claim)."""
+        rng = np.random.default_rng(0)
+        w_true = rng.normal(size=(4,)).astype(np.float32)
+
+        def data_fn(r, n):
+            rr = np.random.default_rng(100 * r + n)
+            x = rr.normal(size=(6, 8, 4)).astype(np.float32)
+            y = x @ w_true
+            return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+        def loss(p, mb):
+            return jnp.mean((mb["x"] @ p["w"] - mb["y"]) ** 2)
+
+        keep = (np.random.default_rng(1).random((20, 4, 6)) > 0.2).astype(np.float32)
+        p0 = {"w": jnp.zeros((4,), jnp.float32)}
+        final, losses = localsgd_train(loss, p0, data_fn, n_workers=4, rounds=20,
+                                       sync_period=6, lr=0.05, keep_mask=keep)
+        assert losses[-1] < 0.1 * losses[0]

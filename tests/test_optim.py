@@ -1,0 +1,100 @@
+"""Optimizer correctness vs an independent numpy reference + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    lamb,
+    lans,
+    sgd,
+    warmup_cosine,
+    warmup_linear,
+)
+
+
+def np_adamw_step(w, g, m, v, t, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, wd=0.01):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1**t)
+    vh = v / (1 - b2**t)
+    w = w - lr * (mh / (np.sqrt(vh) + eps) + wd * w)
+    return w, m, v
+
+
+class TestAdamW:
+    def test_matches_numpy_reference(self):
+        rng = np.random.default_rng(0)
+        w = rng.normal(size=(5, 3)).astype(np.float32)
+        params = {"w": jnp.asarray(w)}
+        opt = adamw(1e-3)
+        state = opt.init(params)
+        m = np.zeros_like(w)
+        v = np.zeros_like(w)
+        for t in range(1, 6):
+            g = rng.normal(size=w.shape).astype(np.float32)
+            upd, state = opt.update({"w": jnp.asarray(g)}, state, params)
+            params = apply_updates(params, upd)
+            w, m, v = np_adamw_step(w, g, m, v, t)
+            np.testing.assert_allclose(np.asarray(params["w"]), w, rtol=2e-5)
+
+    def test_bf16_state_dtype(self):
+        params = {"w": jnp.ones((4,), jnp.float32)}
+        opt = adamw(1e-3, state_dtype=jnp.bfloat16)
+        state = opt.init(params)
+        assert state["m"]["w"].dtype == jnp.bfloat16
+        upd, state = opt.update({"w": jnp.ones((4,))}, state, params)
+        assert state["v"]["w"].dtype == jnp.bfloat16
+        assert bool(jnp.isfinite(upd["w"]).all())
+
+
+def _rosenbrockish(params):
+    w = params["w"]
+    return jnp.sum((w - 1.0) ** 2) + 5.0 * jnp.sum((w[1:] - w[:-1] ** 2) ** 2)
+
+
+@pytest.mark.parametrize("make_opt,lr", [(adamw, 3e-2), (lamb, 3e-2), (lans, 3e-2), (sgd, 1e-3)])
+def test_optimizers_descend(make_opt, lr):
+    params = {"w": jnp.zeros((8,), jnp.float32)}
+    opt = make_opt(lr)
+    state = opt.init(params)
+    l0 = float(_rosenbrockish(params))
+    for _ in range(200):
+        g = jax.grad(_rosenbrockish)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(_rosenbrockish(params)) < 0.25 * l0
+
+
+class TestClip:
+    def test_global_norm(self):
+        t = {"a": jnp.ones((3,)), "b": jnp.full((4,), 2.0)}
+        assert float(global_norm(t)) == pytest.approx(np.sqrt(3 + 16))
+
+    def test_clip_rescales(self):
+        t = {"a": jnp.full((4,), 10.0)}
+        c = clip_by_global_norm(t, 1.0)
+        assert float(global_norm(c)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_clip_noop_below_max(self):
+        t = {"a": jnp.full((4,), 0.1)}
+        c = clip_by_global_norm(t, 10.0)
+        np.testing.assert_allclose(np.asarray(c["a"]), 0.1, rtol=1e-6)
+
+
+class TestSchedules:
+    def test_warmup_linear(self):
+        lr = warmup_linear(1.0, 10, 100)
+        assert float(lr(0)) == 0.0
+        assert float(lr(10)) == pytest.approx(1.0)
+        assert float(lr(100)) == pytest.approx(0.0, abs=1e-6)
+        assert float(lr(55)) == pytest.approx(0.5, rel=0.01)
+
+    def test_warmup_cosine_endpoints(self):
+        lr = warmup_cosine(1.0, 10, 100, floor=0.1)
+        assert float(lr(10)) == pytest.approx(1.0)
+        assert float(lr(100)) == pytest.approx(0.1, abs=1e-6)

@@ -1,0 +1,111 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DropConfig, accumulate_grads, drop_mask, make_grad_fn
+from repro.core.theory import (
+    effective_speedup,
+    expected_completed_microbatches,
+    expected_max_normal,
+)
+from repro.core.threshold import select_threshold
+
+lat_arrays = st.lists(
+    st.floats(min_value=0.01, max_value=10.0), min_size=2, max_size=16
+).map(lambda xs: np.asarray(xs, np.float32))
+
+
+@settings(max_examples=50, deadline=None)
+@given(lat_arrays, st.floats(min_value=0.0, max_value=50.0), st.floats(min_value=0.0, max_value=10.0))
+def test_drop_mask_monotone_in_tau(lat, tau, delta):
+    """Raising the threshold never drops MORE micro-batches."""
+    m1 = np.asarray(drop_mask(jnp.asarray(lat), tau, min_microbatches=0))
+    m2 = np.asarray(drop_mask(jnp.asarray(lat), tau + delta, min_microbatches=0))
+    assert (m2 >= m1).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(lat_arrays, st.floats(min_value=0.0, max_value=50.0))
+def test_drop_mask_is_prefix(lat, tau):
+    """Algorithm 1 stops and never resumes: the keep-mask is a prefix."""
+    m = np.asarray(drop_mask(jnp.asarray(lat), tau, min_microbatches=0))
+    k = int(m.sum())
+    assert (m[:k] == 1).all() and (m[k:] == 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.floats(min_value=0.1, max_value=2.0),
+    st.floats(min_value=0.01, max_value=0.5),
+    st.integers(min_value=2, max_value=32),
+)
+def test_expected_microbatches_bounds(mu, sigma, m):
+    """0 <= E[M~(tau)] <= M for any threshold."""
+    for tau in (0.0, mu * m / 2, mu * m, mu * m * 10):
+        v = expected_completed_microbatches(tau, mu, sigma, m)
+        assert -1e-9 <= v <= m + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.floats(min_value=0.1, max_value=2.0),
+    st.floats(min_value=0.01, max_value=0.3),
+    st.integers(min_value=2, max_value=512),
+)
+def test_expected_max_at_least_mean(mu, sigma, n):
+    """E[max of N] >= mu, and non-decreasing in N."""
+    e1 = expected_max_normal(mu, sigma, n)
+    e2 = expected_max_normal(mu, sigma, 2 * n)
+    assert e1 >= mu - 1e-9
+    assert e2 >= e1 - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=64), st.integers(min_value=2, max_value=12))
+def test_threshold_selection_speedup_at_least_no_drop(n, m):
+    """Algorithm 2 never returns a tau worse than 'never drop' (the grid
+    includes max(T) so S_eff(tau_max) ~ 1)."""
+    rng = np.random.default_rng(n * 100 + m)
+    lat = rng.lognormal(-1.0, 0.6, size=(20, n, m))
+    res = select_threshold(lat, tc=0.3)
+    assert res.speedup >= 0.999
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=6), st.integers(min_value=1, max_value=4))
+def test_accumulate_grads_linear_in_mask(m_keep, n_dims):
+    """Gradients with 'computed' normalization equal the mean over kept
+    micro-batches regardless of how many are kept."""
+    m_total = 6
+    rng = np.random.default_rng(m_keep * 10 + n_dims)
+    xs = jnp.asarray(rng.normal(size=(m_total, 4, n_dims)).astype(np.float32))
+    ys = jnp.asarray(rng.normal(size=(m_total, 4)).astype(np.float32))
+    params = {"w": jnp.zeros((n_dims,), jnp.float32)}
+
+    def loss(p, mb):
+        return jnp.sum((mb["x"] @ p["w"] - mb["y"]) ** 2), jnp.asarray(4.0)
+
+    mask = jnp.asarray([1.0] * m_keep + [0.0] * (m_total - m_keep))
+    g, _, _ = accumulate_grads(
+        make_grad_fn(loss), params, {"x": xs, "y": ys}, mask, DropConfig(normalize="computed")
+    )
+    kept_x = np.asarray(xs[:m_keep]).reshape(-1, n_dims)
+    kept_y = np.asarray(ys[:m_keep]).reshape(-1)
+    g_ref = 2 * kept_x.T @ (kept_x @ np.zeros(n_dims) - kept_y) / kept_x.shape[0]
+    np.testing.assert_allclose(np.asarray(g["w"]), g_ref, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.floats(min_value=0.3, max_value=1.0),
+    st.floats(min_value=0.02, max_value=0.3),
+    st.integers(min_value=4, max_value=16),
+    st.integers(min_value=2, max_value=256),
+    st.floats(min_value=0.0, max_value=2.0),
+)
+def test_effective_speedup_positive_finite(mu, sigma, m, n, tc):
+    for tau in (0.6 * m * mu, m * mu, 2 * m * mu):
+        s = effective_speedup(tau, mu, sigma, m, n, tc)
+        assert np.isfinite(s) and s > 0

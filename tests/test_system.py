@@ -1,0 +1,93 @@
+"""End-to-end behaviour: the paper's top-line claims on a laptop scale.
+
+1. DropCompute preserves convergence at <=10% drop rate (Table 1a).
+2. DropCompute reduces simulated wall-clock in a high-variance
+   environment (fig. 5): fewer seconds to the same loss.
+3. Algorithm 2 auto-selects a threshold that actually helps.
+4. The host-timed engine trains a real model end to end.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DropConfig, HostTimedEngine, LatencyModel, NoiseModel, make_grad_fn
+from repro.data import DataConfig
+from repro.models import ModelConfig
+from repro.models.model import init_params, loss_fn
+from repro.optim import adamw, apply_updates
+from repro.train import TrainConfig, train
+
+TINY = ModelConfig(
+    name="tiny", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=251, dtype="float32", remat=False,
+)
+DATA = DataConfig(vocab_size=251, seq_len=64, batch_size=16, strategy="pack", seed=0)
+DELAY = LatencyModel(base=0.45, noise=NoiseModel(kind="paper_lognormal"))
+
+
+def run(drop_enabled, tau=np.inf, steps=25, auto=False, normalize="computed"):
+    tcfg = TrainConfig(
+        steps=steps, n_workers=4, microbatches=4, lr=1e-3,
+        drop=DropConfig(enabled=drop_enabled, tau=tau, normalize=normalize),
+        latency=DELAY, tc=0.5, auto_threshold=auto, calibration_steps=8, seed=0,
+    )
+    return train(TINY, DATA, tcfg)
+
+
+class TestConvergence:
+    def test_loss_decreases(self):
+        r = run(False)
+        assert r.losses[-1] < r.losses[0] - 0.5
+
+    def test_drop_rate_10pct_matches_baseline(self):
+        """Table 1a: ~10% drops change the final loss negligibly."""
+        base = run(False, steps=40)
+        dropped = run(True, tau=2.9, steps=40)
+        assert 0.02 < np.mean(dropped.drop_fractions) < 0.15
+        assert abs(dropped.losses[-1] - base.losses[-1]) < 0.08
+
+    def test_nominal_normalization_also_converges(self):
+        r = run(True, tau=2.4, steps=30, normalize="nominal")
+        assert r.losses[-1] < r.losses[0] - 0.5
+
+
+class TestRuntime:
+    def test_dropcompute_saves_time(self):
+        """fig. 5: with compute variance, DropCompute reaches the end of
+        training in less simulated time."""
+        base = run(False, steps=30)
+        drop = run(True, tau=2.6, steps=30)
+        assert drop.metrics["total_sim_time"] < 0.97 * base.metrics["total_sim_time"]
+
+    def test_auto_threshold_selected_and_helps(self):
+        r = run(True, tau=np.inf, steps=30, auto=True)
+        assert np.isfinite(r.tau)
+        base = run(False, steps=30)
+        assert r.metrics["total_sim_time"] < base.metrics["total_sim_time"]
+
+
+class TestHostTimedEndToEnd:
+    def test_real_wallclock_training(self):
+        """Algorithm 1 with REAL timing around jitted micro-batch grads."""
+        cfg = TINY
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        opt = adamw(1e-3)
+        state = opt.init(params)
+        engine = HostTimedEngine(
+            make_grad_fn(lambda p, mb: loss_fn(p, cfg, mb)),
+            DropConfig(enabled=True, tau=60.0),
+        )
+        from repro.data import microbatches_at
+
+        losses = []
+        for step in range(8):
+            mbs = microbatches_at(step, DATA, m=4)
+            mbs = {k: jnp.asarray(v) for k, v in mbs.items()}
+            grads, loss, stats = engine.step(params, mbs)
+            upd, state = opt.update(grads, state, params)
+            params = apply_updates(params, upd)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+        prof = engine.profile()
+        assert prof.shape[0] == 8 and np.isfinite(prof).any()

@@ -1,0 +1,118 @@
+"""Validate the closed-form runtime analysis (§4, appendix C.2) against
+Monte-Carlo simulation — the paper's own claims, reproduced."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    LatencyModel,
+    NoiseModel,
+    effective_speedup,
+    expected_completed_microbatches,
+    expected_max_normal,
+    norm_cdf,
+    norm_ppf,
+    optimal_tau,
+    simulate,
+    speedup_vs_workers,
+)
+from repro.core.theory import asymptotic_max_coefficient
+
+
+class TestNormalHelpers:
+    def test_ppf_inverts_cdf(self):
+        for p in (0.01, 0.3, 0.5, 0.9, 0.999):
+            assert norm_cdf(norm_ppf(p)) == pytest.approx(p, abs=1e-6)
+
+
+class TestExpectedMax:
+    @pytest.mark.parametrize("n", [2, 16, 64, 256])
+    def test_bailey_vs_monte_carlo(self, n):
+        """eq. (4): E[max of N normals] within ~1.5% of Monte Carlo."""
+        mu, sig = 1.0, 0.2
+        mc = np.random.default_rng(0).normal(mu, sig, (50000, n)).max(axis=1).mean()
+        th = expected_max_normal(mu, sig, n)
+        assert th == pytest.approx(mc, rel=0.015)
+
+    def test_sqrt_log_n_asymptotics(self):
+        """E[T] = Theta(sqrt(log N)) — §4.2."""
+        mu, sig = 0.0, 1.0
+        ratios = [
+            expected_max_normal(mu, sig, n) / asymptotic_max_coefficient(n)
+            for n in (10**2, 10**4, 10**6)
+        ]
+        # ratio approaches 1 from below as N grows
+        assert ratios[0] < ratios[1] < ratios[2] < 1.05
+        assert ratios[2] > 0.9
+
+
+class TestCompletedMicrobatches:
+    def test_eq5_vs_monte_carlo(self):
+        """eq. (5): E[M~] within 2% of simulation for normal latencies."""
+        mu, sig, m = 0.5, 0.1, 12
+        rng = np.random.default_rng(1)
+        t = np.maximum(rng.normal(mu, sig, (20000, m)), 0.0)
+        for tau in (4.0, 5.0, 6.0, 7.0):
+            mc = (np.cumsum(t, axis=1) < tau).sum(axis=1).mean()
+            th = expected_completed_microbatches(tau, mu, sig, m)
+            assert th == pytest.approx(mc, rel=0.02), tau
+
+    def test_monotone_in_tau(self):
+        vals = [expected_completed_microbatches(t, 0.5, 0.1, 12) for t in np.linspace(3, 8, 20)]
+        assert all(b >= a for a, b in zip(vals, vals[1:]))
+
+    def test_saturates_at_m(self):
+        assert expected_completed_microbatches(1e9, 0.5, 0.1, 12) == pytest.approx(12)
+
+
+class TestEffectiveSpeedup:
+    def test_large_tau_is_one(self):
+        """tau >= T: no drops, no time saved => S_eff == 1."""
+        s = effective_speedup(1e9, 0.5, 0.05, 12, 64, tc=0.5)
+        assert s == pytest.approx(1.0, rel=1e-3)
+
+    def test_analytic_matches_simulation_normal_noise(self):
+        """fig. 3a: analytic S_eff tracks simulation under normal noise."""
+        model = LatencyModel(base=0.45, noise=NoiseModel(kind="normal", mean=0.5, var=0.05))
+        sim = simulate(model, iters=300, workers=64, m=12, tc=0.5, seed=3)
+        mu, sig = model.mean, model.std
+        for tau in (6.5, 7.0, 8.0):
+            s_sim = sim.effective_speedup(tau)
+            s_th = effective_speedup(tau, mu, sig, 12, 64, tc=0.5)
+            assert s_th == pytest.approx(s_sim, rel=0.04), tau
+
+    def test_speedup_grows_with_workers(self):
+        """§4.4: E[S_eff(tau*)] increases with N (to infinity in the limit)."""
+        out = speedup_vs_workers(0.5, 0.15, 12, [4, 16, 64, 256, 1024], tc=0.2)
+        sp = [out[n]["speedup"] for n in (4, 16, 64, 256, 1024)]
+        assert all(b > a for a, b in zip(sp, sp[1:]))
+        assert sp[0] >= 1.0
+
+    def test_optimal_tau_beats_endpoints(self):
+        tau, s = optimal_tau(0.5, 0.15, 12, 64, tc=0.2)
+        lo = effective_speedup(0.55 * 12 * 0.5, 0.5, 0.15, 12, 64, tc=0.2)
+        hi = effective_speedup(1e9, 0.5, 0.15, 12, 64, tc=0.2)
+        assert s >= max(lo, hi) - 1e-9
+
+
+class TestSimulation:
+    def test_paper_delay_statistics(self):
+        """Appendix B.1: additive noise makes accumulations ~x1.5 longer on
+        average and at most ~x6.5."""
+        model = LatencyModel(base=0.45, noise=NoiseModel(kind="paper_lognormal"))
+        rng = np.random.default_rng(0)
+        t = model.sample(rng, 50, 16, 12)
+        assert t.mean() / 0.45 == pytest.approx(1.5, rel=0.1)
+        assert t.max() / 0.45 <= 6.6
+
+    def test_iteration_time_is_max_over_workers(self):
+        sim = simulate(LatencyModel(), 10, 8, 4, tc=0.0)
+        np.testing.assert_allclose(sim.T, sim.T_n.max(axis=1))
+
+    def test_more_workers_slower_iterations(self):
+        """The straggler effect: E[T] grows with N (fig. 1 mechanism)."""
+        model = LatencyModel(base=0.45, noise=NoiseModel(kind="paper_lognormal"))
+        t8 = simulate(model, 100, 8, 12, seed=5).T.mean()
+        t128 = simulate(model, 100, 128, 12, seed=6).T.mean()
+        assert t128 > t8 * 1.1

@@ -1,0 +1,48 @@
+"""Algorithm 2 (automatic threshold selection) tests."""
+import numpy as np
+import pytest
+
+from repro.core import LatencyModel, NoiseModel, select_threshold, simulate
+
+
+def profile(workers=32, m=12, iters=100, kind="paper_lognormal", seed=0):
+    model = LatencyModel(base=0.45, noise=NoiseModel(kind=kind))
+    return simulate(model, iters, workers, m, tc=0.5, seed=seed)
+
+
+class TestSelectThreshold:
+    def test_matches_bruteforce(self):
+        sim = profile()
+        res = select_threshold(sim.t, sim.tc, grid_size=128)
+        # brute force over the same grid using SimResult.effective_speedup
+        best = max(res.grid, key=lambda tau: sim.effective_speedup(tau))
+        assert res.tau == pytest.approx(best)
+        assert res.speedup == pytest.approx(sim.effective_speedup(best), rel=1e-9)
+
+    def test_speedup_above_one_with_heavy_tail(self):
+        """In the paper's simulated-delay environment DropCompute should
+        find a threshold with S_eff well above 1 (§5.2 reports 1.13-1.18)."""
+        sim = profile(workers=64)
+        res = select_threshold(sim.t, sim.tc)
+        assert res.speedup > 1.05
+        # and only a small fraction of micro-batches is dropped
+        comp = res.completion[np.argmax(res.speedups)]
+        assert comp > 0.8
+
+    def test_no_variance_no_gain(self):
+        """Deterministic compute: the best threshold drops ~nothing."""
+        sim = profile(kind="none")
+        res = select_threshold(sim.t, sim.tc)
+        assert res.speedup == pytest.approx(1.0, abs=0.02)
+
+    def test_all_workers_agree(self):
+        """Decentralization: the selection is a pure function of the shared
+        profile — every worker computes the same tau*."""
+        sim = profile(workers=8, iters=50)
+        r1 = select_threshold(sim.t, sim.tc)
+        r2 = select_threshold(sim.t.copy(), float(sim.tc))
+        assert r1.tau == r2.tau
+
+    def test_shapes_validated(self):
+        with pytest.raises(ValueError):
+            select_threshold(np.ones((3, 4)), 0.1)
