@@ -1,26 +1,36 @@
-"""Serve a small model: batched greedy decoding over a KV cache.
+"""Serve a small model with the chunked-prefill continuous batcher.
 
-    PYTHONPATH=src python examples/serve.py --batch 8 --new-tokens 32
+    PYTHONPATH=src python examples/serve.py --batch 8 --new-tokens 32 \
+        --chunk-size 16 --token-budget 48
 
-Initializes a small decoder, "prefills" a batch of prompts token by token
-into the cache, then decodes new tokens for the whole batch in lockstep —
-the same ``decode_step`` the decode_32k / long_500k dry-run shapes lower.
+Initializes a small decoder and pushes a stream of requests through
+``ContinuousBatcher``: prompts are prefilled ``--chunk-size`` tokens per
+engine step, and each step's total work is capped at ``--token-budget``
+scheduled tokens — the serving analogue of DropCompute's compute
+threshold ``tau`` (overflow prefill chunks are deferred, decode slots
+never stall).  ``--chunk-size 1`` reproduces the seed token-streaming
+behaviour for comparison.
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.models import ModelConfig
-from repro.models.model import decode_step, init_decode_cache, init_params
+from repro.models.model import init_params
+from repro.serve import ContinuousBatcher, Request
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=8, help="cache slots")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="per-step scheduled-token cap (0 = uncapped)")
     ap.add_argument("--arch", default="",
                     help="optional smoke-config name (e.g. mixtral-8x22b)")
     args = ap.parse_args()
@@ -38,34 +48,34 @@ def main():
 
     params = init_params(jax.random.PRNGKey(0), cfg)
     max_len = args.prompt_len + args.new_tokens
-    cache = init_decode_cache(params, cfg, args.batch, max_len)
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    eng = ContinuousBatcher(
+        params, cfg, batch_slots=args.batch, max_len=max_len,
+        chunk_size=args.chunk_size,
+        token_budget=args.token_budget or None,
     )
 
-    step = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos, moe_impl="dense"))
+    rng = np.random.default_rng(1)
+    for uid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len).tolist()
+        eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=args.new_tokens))
 
-    # prefill (token-by-token through the decode path)
     t0 = time.time()
-    logits = None
-    for t in range(args.prompt_len):
-        logits, cache = step(params, cache, prompts[:, t : t + 1], jnp.int32(t))
-    jax.block_until_ready(logits)
-    print(f"prefill {args.prompt_len} tokens x {args.batch} seqs: {time.time()-t0:.2f}s")
-
-    # decode
-    tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    for t in range(args.prompt_len, max_len - 1):
-        logits, cache = step(params, cache, tok, jnp.int32(t))
-        tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
+    done = eng.run()
     dt = time.time() - t0
-    n = len(out) * args.batch
-    print(f"decoded {n} tokens in {dt:.2f}s  ({n/dt:.1f} tok/s batched)")
-    print("sample continuation:", [int(t[0, 0]) for t in out[:12]])
+
+    s = eng.stats_summary()
+    n_out = sum(len(r.output) for r in done.values())
+    n_prompt = args.requests * args.prompt_len
+    print(f"finished {len(done)}/{args.requests} requests in {dt:.2f}s "
+          f"({eng.steps} engine steps)")
+    print(f"  prompt tokens {n_prompt}  output tokens {n_out}  "
+          f"total {(n_prompt + n_out)/dt:.1f} tok/s")
+    print(f"  mean TTFT {s['mean_ttft']*1e3:.1f} ms   p99 TTFT {s['p99_ttft']*1e3:.1f} ms")
+    print(f"  max step tokens {s['max_step_tokens']:.0f}  "
+          f"deferred {s['deferred_tokens']:.0f}  "
+          f"max step wall {s['max_step_wall']*1e3:.1f} ms")
+    r0 = done[0]
+    print("sample continuation:", r0.output[:12])
 
 
 if __name__ == "__main__":

@@ -158,20 +158,36 @@ class SimResult:
     def mean_worker_time(self) -> float:
         return float(np.mean(self.T_n) + self.tc)
 
-    def with_threshold(self, tau: float):
+    def with_threshold(self, tau: float, min_microbatches: int = 1):
         """Apply DropCompute with threshold ``tau`` (on compute time only).
+
+        Mirrors ``dropcompute.drop_mask`` exactly: micro-batch ``m`` is kept
+        iff its cumulative time is below ``tau`` OR ``m < min_microbatches``
+        (a worker never drops its first ``min_microbatches`` accumulations,
+        so tiny thresholds report >= min_microbatches/M completion, not 0).
+        The iteration time is floored accordingly: when the guaranteed
+        micro-batches overrun ``tau``, the step takes as long as the slowest
+        worker needs to compute them.
 
         Returns (iteration_time (I,), completed micro-batch fraction (I,)).
         """
         cum = np.cumsum(self.t, axis=-1)  # (I, N, M)
         done = cum < tau
-        m_tilde = done.sum(axis=-1).mean(axis=-1)  # (I,) avg over workers
-        t_iter = np.minimum(self.T, tau) + self.tc
+        if min_microbatches > 0:
+            done |= np.arange(self.t.shape[-1]) < min_microbatches
+        counts = done.sum(axis=-1)  # (I, N) kept micro-batches
+        m_tilde = counts.mean(axis=-1)  # (I,) avg over workers
+        # worker time = cum at its last kept micro-batch (prefix mask)
+        w_time = np.take_along_axis(
+            cum, np.maximum(counts - 1, 0)[..., None], axis=-1
+        )[..., 0]
+        forced = np.where(counts > 0, w_time, 0.0).max(axis=-1)  # (I,)
+        t_iter = np.maximum(np.minimum(self.T, tau), forced) + self.tc
         return t_iter, m_tilde / self.t.shape[-1]
 
-    def effective_speedup(self, tau: float) -> float:
+    def effective_speedup(self, tau: float, min_microbatches: int = 1) -> float:
         """Empirical S_eff(tau), eq. (6), averaged per-iteration (Alg. 2)."""
-        t_iter, frac = self.with_threshold(tau)
+        t_iter, frac = self.with_threshold(tau, min_microbatches)
         s_i = (self.T + self.tc) / t_iter * frac
         return float(np.mean(s_i))
 

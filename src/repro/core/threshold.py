@@ -37,6 +37,7 @@ def select_threshold(
     tc,
     grid: Optional[Sequence[float]] = None,
     grid_size: int = 256,
+    min_microbatches: int = 1,
 ) -> ThresholdResult:
     """Algorithm 2: pick tau* maximizing the mean per-iteration S_eff.
 
@@ -64,11 +65,27 @@ def select_threshold(
         grid = np.linspace(lo, hi, grid_size)
     grid = np.asarray(list(grid), dtype=np.float64)
 
-    # completed micro-batches per (tau, I): mean_n sum_m [T_{i,n}^{(m)} < tau]
+    # completed micro-batches per (tau, I): mean_n sum_m [T_{i,n}^{(m)} < tau],
+    # with the same min_microbatches floor as dropcompute.drop_mask /
+    # SimResult.with_threshold (workers never drop their first few).
     done = cum[None, ...] < grid[:, None, None, None]  # (G, I, N, M)
+    if min_microbatches > 0:
+        done |= np.arange(m_) < min_microbatches
     m_tilde = done.sum(axis=-1).mean(axis=-1)  # (G, I)
 
-    t_drop = np.minimum(t_i[None, :], grid[:, None]) + tc[None, :]  # (G, I)
+    # worker time = cum at its last kept micro-batch; done is a prefix
+    # mask, so gather at index count-1 instead of materializing a
+    # (G, I, N, M) float temp alongside the boolean one.
+    counts = done.sum(axis=-1)  # (G, I, N)
+    w_time = np.take_along_axis(
+        np.broadcast_to(cum[None], done.shape),  # view, no copy
+        np.maximum(counts - 1, 0)[..., None], axis=-1,
+    )[..., 0]
+    w_time = np.where(counts > 0, w_time, 0.0)  # (G, I, N)
+    forced = w_time.max(axis=-1)  # (G, I)
+    t_drop = (
+        np.maximum(np.minimum(t_i[None, :], grid[:, None]), forced) + tc[None, :]
+    )  # (G, I)
     s_step = (t_i + tc)[None, :] / t_drop  # time-only speedup
     s_i = s_step * (m_tilde / m_)  # effective speedup per iteration
     s_eff = s_i.mean(axis=1)  # (G,)

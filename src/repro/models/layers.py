@@ -354,6 +354,7 @@ def apply_attention(
     cache: Optional[Dict[str, jnp.ndarray]] = None,
     cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
     decode_pos: Optional[jnp.ndarray] = None,
+    seq_lens: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """One attention block application.
 
@@ -363,6 +364,13 @@ def apply_attention(
     cache (decode mode): {"k": (B, L, KV, D), "v": ...} — pre-allocated
     ring/linear buffer; this function writes the current token's K/V at
     ``decode_pos`` and attends over valid entries.
+
+    seq_lens (chunked prefill): (B,) active token count per slot for a
+    (B, C) chunk — slot i consumes x[i, :seq_lens[i]] at absolute
+    positions decode_pos[i]..decode_pos[i]+seq_lens[i]-1; the remaining
+    columns are padding (no cache write, output ignored).  Requires a
+    linear cache (buffer length covers every absolute position, no ring
+    wraparound); sliding windows are enforced through the mask instead.
     """
     cd = cfg.compute_dtype
     window = cfg.sliding_window if kind == "L" else 0
@@ -396,6 +404,38 @@ def apply_attention(
             out = sdpa(q, k, v, mask, cfg.logit_softcap)
         if out.shape[2] != real_h:
             out = out[:, :, :real_h]
+    elif seq_lens is not None or x.shape[1] > 1:
+        # Chunked prefill: write up to C tokens per slot at its absolute
+        # positions, attend causally over the linear buffer.  Inactive
+        # columns (col >= seq_lens[i]) scatter out of range and are
+        # dropped, so previously written rows are never clobbered; active
+        # write positions are distinct, so the scatter is race-free.
+        buf_len = cache["k"].shape[1]
+        b, c = x.shape[:2]
+        pos = jnp.asarray(decode_pos)
+        assert pos.ndim == 1, "chunked prefill needs per-slot positions"
+        # A ring buffer (buf_len == window < seq_len) would silently drop
+        # writes past the window here; require the linear layout.  (When
+        # seq_len <= window the "ring" never wraps and buf_len != window.)
+        assert window == 0 or buf_len > window, (
+            f"chunked prefill needs a linear cache "
+            f"(init_decode_cache(..., linear=True)); got ring buffer of "
+            f"{buf_len} rows for sliding window {window}"
+        )
+        offs = jnp.arange(c)
+        qpos = pos[:, None] + offs[None, :]  # (B, C) absolute positions
+        lens = jnp.full((b,), c, jnp.int32) if seq_lens is None else seq_lens
+        active = offs[None, :] < lens[:, None]  # (B, C)
+        wp = jnp.where(active, qpos, buf_len)  # OOB => dropped by scatter
+        bidx = jnp.arange(b)[:, None]
+        ck = cache["k"].at[bidx, wp].set(k.astype(cache["k"].dtype), mode="drop")
+        cv = cache["v"].at[bidx, wp].set(v.astype(cache["v"].dtype), mode="drop")
+        kpos_idx = jnp.arange(buf_len)
+        valid = kpos_idx[None, None, :] <= qpos[..., None]  # (B, C, L)
+        if window > 0:
+            valid &= kpos_idx[None, None, :] > qpos[..., None] - window
+        out = sdpa(q, ck.astype(cd), cv.astype(cd), valid[:, None], cfg.logit_softcap)
+        cache = {"k": ck, "v": cv}
     else:
         # Decode: write K/V at cache position, attend over the buffer.
         # decode_pos is a scalar (lockstep batch) or (B,) per-slot vector
@@ -435,9 +475,19 @@ def apply_attention(
     return y, cache
 
 
-def init_attention_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int):
-    """Pre-allocated decode cache for one attention layer."""
-    buf = min(cfg.sliding_window, seq_len) if kind == "L" else seq_len
+def init_attention_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int, linear: bool = False):
+    """Pre-allocated decode cache for one attention layer.
+
+    linear=True allocates the full ``seq_len`` even for sliding-window
+    layers (no ring wraparound) — required by the chunked-prefill path,
+    which enforces the window through the attention mask instead and
+    asserts ``buf > window`` to reject ring buffers (hence the +1 pad
+    when seq_len == window).
+    """
+    if kind == "L":
+        buf = max(seq_len, cfg.sliding_window + 1) if linear else min(cfg.sliding_window, seq_len)
+    else:
+        buf = seq_len
     kv, hd = cfg.n_kv_heads, cfg.hd
     return {
         "k": jnp.zeros((batch, buf, kv, hd), cfg.compute_dtype),

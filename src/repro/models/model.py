@@ -232,7 +232,14 @@ def init_decode_cache(
     batch: int,
     seq_len: int,
     enc_out: Optional[jnp.ndarray] = None,
+    linear: bool = False,
 ) -> PyTree:
+    """Pre-allocated KV/state cache for ``decode_step`` / ``prefill_chunk``.
+
+    linear=True allocates full-length (non-ring) buffers for sliding-window
+    layers; required by ``prefill_chunk`` (the serving engine), whose
+    multi-token scatter writes assume absolute positions never wrap.
+    """
     if cfg.is_encdec:
         # the enc-dec decoder stack is tail-only (see init_params): its
         # cache must mirror that structure, not the grouped-scan layout
@@ -250,7 +257,54 @@ def init_decode_cache(
             ],
         }
         return cache
-    return {"stack": init_stack_cache(cfg, batch, seq_len)}
+    return {"stack": init_stack_cache(cfg, batch, seq_len, linear=linear)}
+
+
+def prefill_chunk(
+    params: PyTree,
+    cfg: ModelConfig,
+    cache: PyTree,
+    tokens: jnp.ndarray,  # (B, C) int32
+    pos: jnp.ndarray,  # (B,) first absolute position per slot
+    seq_lens: jnp.ndarray,  # (B,) active token count per slot (0 = idle)
+    moe_impl: str = "dense",
+) -> Tuple[jnp.ndarray, PyTree]:
+    """Process up to C prompt tokens per slot in one step (chunked prefill).
+
+    Slot i consumes ``tokens[i, :seq_lens[i]]`` at absolute positions
+    ``pos[i]..pos[i]+seq_lens[i]-1``, writing its KV-cache rows there;
+    padding columns neither write the cache nor produce meaningful logits.
+    Returns logits for every (slot, column) — the caller reads column
+    ``seq_lens[i]-1`` when slot i just finished its prompt, or column 0
+    for a single-token decode slot.  With C == 1 and seq_lens in {0, 1}
+    this is a decode step that skips idle slots, so one function serves
+    the whole mixed decode+prefill engine iteration.
+
+    The cache must be allocated with ``init_decode_cache(..., linear=True)``
+    (no ring buffers).  Only attention patterns support chunking: recurrent
+    layers ('R'/'M') advance their state token-by-token.
+
+    Host-side driver loops must synchronize each step (e.g.
+    ``jax.block_until_ready`` or materializing the sampled token) before
+    reusing the host-side token/position buffers: with async dispatch,
+    jax<=0.4 CPU can read freed host memory mid-execution otherwise.
+    ``ContinuousBatcher`` does this for you.
+    """
+    assert set(cfg.pattern) <= {"G", "L"}, (
+        f"chunked prefill supports attention-only patterns, got {cfg.pattern!r}"
+    )
+    assert not cfg.is_encdec, "chunked prefill does not support enc-dec models"
+    pos = jnp.asarray(pos)
+    c = tokens.shape[1]
+    positions = pos[:, None] + jnp.arange(c)[None, :]  # (B, C) for RoPE
+    x = L.embed(params["embed"], tokens, cfg, positions)
+    x, new_stack, _ = apply_stack(
+        params["stack"], x, cfg, positions, cache["stack"],
+        decode_pos=pos, seq_lens=jnp.asarray(seq_lens), moe_impl=moe_impl,
+    )
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"stack": new_stack}
 
 
 def decode_step(

@@ -102,6 +102,7 @@ def apply_block(
     decode_pos=None,
     enc_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
     moe_impl: str = "sort",
+    seq_lens=None,
 ) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -110,7 +111,8 @@ def apply_block(
         h = L.apply_norm(p["norm1"], x, cfg)
         attn_cache = None if cache is None else cache.get("attn")
         y, attn_cache = L.apply_attention(
-            p["attn"], h, cfg, kind, positions, attn_cache, decode_pos=decode_pos
+            p["attn"], h, cfg, kind, positions, attn_cache, decode_pos=decode_pos,
+            seq_lens=seq_lens,
         )
         x = x + y
         if enc_kv is not None and "cross_attn" in p:
@@ -147,10 +149,13 @@ def apply_block(
     return x, new_cache, aux
 
 
-def init_block_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int, cross: bool = False):
+def init_block_cache(
+    cfg: ModelConfig, kind: str, batch: int, seq_len: int, cross: bool = False,
+    linear: bool = False,
+):
     c: Dict[str, PyTree] = {}
     if kind in ("G", "L", "B"):
-        c["attn"] = L.init_attention_cache(cfg, kind, batch, seq_len)
+        c["attn"] = L.init_attention_cache(cfg, kind, batch, seq_len, linear=linear)
     elif kind == "R":
         c["rglru"] = RG.init_rglru_cache(cfg, batch)
     elif kind == "M":
@@ -184,15 +189,15 @@ def init_stack(rng, cfg: ModelConfig, cross: bool = False) -> PyTree:
     return {"groups": tuple(groups), "tail": tail_ps}
 
 
-def init_stack_cache(cfg: ModelConfig, batch: int, seq_len: int) -> PyTree:
+def init_stack_cache(cfg: ModelConfig, batch: int, seq_len: int, linear: bool = False) -> PyTree:
     unit, n_groups, tail = _unit_and_groups(cfg)
     groups = []
     for kind in unit:
-        one = init_block_cache(cfg, kind, batch, seq_len)
+        one = init_block_cache(cfg, kind, batch, seq_len, linear=linear)
         stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape).copy(), one)
         groups.append(stacked)
     tail_cs = [
-        init_block_cache(cfg, cfg.pattern[n_groups * len(unit) + i], batch, seq_len)
+        init_block_cache(cfg, cfg.pattern[n_groups * len(unit) + i], batch, seq_len, linear=linear)
         for i in range(tail)
     ]
     return {"groups": tuple(groups), "tail": tail_cs}
@@ -207,6 +212,7 @@ def apply_stack(
     decode_pos=None,
     enc_kv_fn=None,
     moe_impl: str = "sort",
+    seq_lens=None,
 ) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
     """Apply all layers. enc_kv_fn(block_params, ) is handled by encdec path
     in model.py via per-block cross KV computed there (cross_kv passed as a
@@ -225,7 +231,7 @@ def apply_stack(
             cache_j = None if group_caches is None else group_caches[j]
             x, nc, a = apply_block(
                 group_params[j], x, cfg, kind, positions, cache_j,
-                decode_pos=decode_pos, moe_impl=moe_impl,
+                decode_pos=decode_pos, moe_impl=moe_impl, seq_lens=seq_lens,
             )
             new_caches.append(nc)
             aux = aux + a
@@ -266,7 +272,8 @@ def apply_stack(
             nc = None
         else:
             x, nc, a = apply_block(
-                p, x, cfg, kind, positions, cache_i, decode_pos=decode_pos, moe_impl=moe_impl
+                p, x, cfg, kind, positions, cache_i, decode_pos=decode_pos,
+                moe_impl=moe_impl, seq_lens=seq_lens,
             )
         new_tail.append(nc)
         aux_total = aux_total + a

@@ -1,3 +1,3 @@
-from .scheduler import ContinuousBatcher, Request
+from .scheduler import AdmissionError, ContinuousBatcher, Request, StepStats
 
-__all__ = ["ContinuousBatcher", "Request"]
+__all__ = ["AdmissionError", "ContinuousBatcher", "Request", "StepStats"]

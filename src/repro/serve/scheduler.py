@@ -1,20 +1,47 @@
-"""Continuous-batching serving scheduler.
+"""Continuous-batching serving engine with chunked prefill.
 
 A fixed pool of B cache slots; requests are admitted into free slots as
-they complete (vLLM-style iteration-level scheduling).  Every engine step
-decodes ONE token for all active slots via the per-slot-position
-``decode_step`` path (each sequence at its own absolute position in its
-own cache rows).  Prefill is streamed through the same decode path
-token-by-token — simple, cache-correct, and shape-stable (one compiled
-program for the whole serving session).
+they complete (vLLM-style iteration-level scheduling).  Every engine
+iteration schedules a *mixed* batch of work:
 
-This is the serving-side analogue of DropCompute's scheduling philosophy:
-keep the synchronous engine step, let per-slot state absorb the
-heterogeneity (here: request lengths; there: compute variance).
+* decode slots consume exactly one token (the previous output token);
+* prefill slots consume up to ``chunk_size`` prompt tokens, written to
+  the KV cache at the slot's absolute positions in a single
+  ``prefill_chunk`` call — a 512-token prompt costs ~512/chunk_size
+  engine steps to first token instead of 512.
+
+Scheduling runs under a **per-step token budget** with a deadline-drop
+policy, the serving analogue of DropCompute's Algorithm 1: the budget is
+the compute threshold ``tau``, scheduled tokens are the micro-batches,
+and prefill chunks past the threshold are *deferred to the next
+iteration* rather than stalling every decode slot behind one long
+prompt.  Two guarantees mirror the paper's semantics:
+
+* decode slots are always scheduled (synchronous progress is preserved;
+  only prefill becomes stochastic across iterations), and
+* at least one prefill token is scheduled whenever prefill work is
+  waiting (the analogue of ``min_microbatches=1`` — no starvation).
+
+Shape stability: the engine compiles at most two programs per session —
+a (B, chunk_size) mixed step and a (B, 1) decode-only step — because the
+budget only changes the *contents* of the per-slot length vector, never
+tensor shapes.
+
+A consequence worth being precise about: per-step wall time is bounded
+by the fixed cost of those two compiled programs, and the budget bounds
+*scheduled tokens* (admission of new prefill work per iteration), which
+is what spreads a long prompt across iterations so decode slots emit on
+every one of them.  In this dense reference implementation a mixed step
+computes the full (B, chunk_size) shape regardless of how many tokens
+were granted; a token-packed step program (vLLM-style flattened batch),
+where granted tokens alone determine the compute, is the ROADMAP next
+step that turns the same accounting into proportional wall time.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -22,9 +49,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import ModelConfig
-from ..models.model import decode_step, init_decode_cache
+from ..models.model import init_decode_cache, prefill_chunk
 
 PyTree = object
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _engine_step(params, cfg: ModelConfig, cache, tokens, pos, lens):
+    """Module-level jitted step: compilations are shared across engines
+    with the same (cfg, shapes) — engine construction stays cheap."""
+    return prefill_chunk(params, cfg, cache, tokens, pos, lens, moe_impl="dense")
+
+
+class AdmissionError(RuntimeError):
+    """Raised by ``submit`` when the engine's wait queue is full."""
 
 
 @dataclasses.dataclass
@@ -33,10 +71,45 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     output: List[int] = dataclasses.field(default_factory=list)
+    # --- latency accounting (filled in by the engine) ---
+    submitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    admitted_step: Optional[int] = None  # engine step the request got a slot
+    first_token_step: Optional[int] = None
 
     @property
     def done(self) -> bool:
         return len(self.output) >= self.max_new_tokens
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (seconds), submit -> first output token."""
+        if self.submitted_at is None or self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def ttft_steps(self) -> Optional[int]:
+        """Engine iterations from slot admission to first output token."""
+        if self.admitted_step is None or self.first_token_step is None:
+            return None
+        return self.first_token_step - self.admitted_step + 1
+
+
+@dataclasses.dataclass
+class StepStats:
+    """Per-iteration scheduling record (compute accounting for the budget)."""
+
+    step: int
+    decode_tokens: int  # decode slots fed (1 token each)
+    prefill_tokens: int  # prompt tokens consumed this step
+    deferred_tokens: int  # prompt tokens pushed past the deadline
+    wall_time: float  # host-measured step duration (seconds)
+
+    @property
+    def scheduled_tokens(self) -> int:
+        return self.decode_tokens + self.prefill_tokens
 
 
 @dataclasses.dataclass
@@ -48,25 +121,65 @@ class _Slot:
     def free(self) -> bool:
         return self.req is None
 
+    @property
+    def prefilling(self) -> bool:
+        return self.req is not None and self.pos < len(self.req.prompt)
+
 
 class ContinuousBatcher:
-    """Engine: admit / step / drain."""
+    """Engine: admit / step / drain.
 
-    def __init__(self, params: PyTree, cfg: ModelConfig, batch_slots: int, max_len: int):
+    Args:
+      params, cfg: model (attention-only patterns; see ``prefill_chunk``).
+      batch_slots: cache slots B (max concurrent requests).
+      max_len: per-slot cache length (prompt + generated tokens).
+      chunk_size: max prompt tokens one slot consumes per step.
+      token_budget: per-step compute cap in scheduled tokens — the serving
+        ``tau``.  Decode slots always run; prefill fills the remainder and
+        overflow chunks are deferred.  None = uncapped (schedule a full
+        chunk for every prefilling slot).
+      max_queue: admission control — ``submit`` raises ``AdmissionError``
+        once this many requests are waiting for a slot.  None = unbounded.
+    """
+
+    def __init__(
+        self,
+        params: PyTree,
+        cfg: ModelConfig,
+        batch_slots: int,
+        max_len: int,
+        chunk_size: int = 16,
+        token_budget: Optional[int] = None,
+        max_queue: Optional[int] = None,
+    ):
+        assert chunk_size >= 1
+        assert token_budget is None or token_budget >= 1
+        # fail at construction, not on the first step mid-trace
+        assert set(cfg.pattern) <= {"G", "L"}, (
+            f"ContinuousBatcher needs an attention-only pattern (got "
+            f"{cfg.pattern!r}); recurrent/SSM models decode via decode_step"
+        )
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
+        self.chunk_size = chunk_size
+        self.token_budget = token_budget
+        self.max_queue = max_queue
         self.slots = [_Slot() for _ in range(batch_slots)]
-        self.cache = init_decode_cache(params, cfg, batch_slots, max_len)
-        self._step = jax.jit(
-            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos, moe_impl="dense")
-        )
+        self.cache = init_decode_cache(params, cfg, batch_slots, max_len, linear=True)
         self.queue: List[Request] = []
         self.finished: Dict[int, Request] = {}
+        self.steps = 0
+        self.step_stats: List[StepStats] = []
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         assert len(req.prompt) + req.max_new_tokens <= self.max_len, "request too long"
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            raise AdmissionError(
+                f"queue full ({len(self.queue)}/{self.max_queue}); retry later"
+            )
+        req.submitted_at = time.perf_counter()
         self.queue.append(req)
 
     def _admit(self):
@@ -74,43 +187,108 @@ class ContinuousBatcher:
             if s.free and self.queue:
                 s.req = self.queue.pop(0)
                 s.pos = 0
+                s.req.admitted_step = self.steps
 
     @property
     def busy(self) -> bool:
         return bool(self.queue) or any(not s.free for s in self.slots)
 
     # ------------------------------------------------------------------
+    def _schedule(self) -> List[int]:
+        """Per-slot token counts for this step under the budget.
+
+        Decode slots first (1 token each, unconditional), then prefill
+        chunks in admission order (oldest request first, NOT slot order —
+        slots are recycled, so slot index says nothing about age) until
+        ``token_budget`` is exhausted.  The oldest prefilling request is
+        always granted >= 1 token, so under sustained load every prompt
+        reaches the head of the line and makes progress: no starvation.
+        """
+        n = [0] * len(self.slots)
+        spent = 0
+        prefill = []
+        for i, s in enumerate(self.slots):
+            if s.free:
+                continue
+            if not s.prefilling:
+                n[i] = 1  # decode: always scheduled
+                spent += 1
+            else:
+                prefill.append(i)
+        prefill.sort(key=lambda i: (self.slots[i].req.admitted_step, self.slots[i].req.uid))
+        for rank, i in enumerate(prefill):
+            s = self.slots[i]
+            want = min(self.chunk_size, len(s.req.prompt) - s.pos)
+            left = want if self.token_budget is None else self.token_budget - spent
+            grant = min(want, max(left, 0))
+            if grant == 0 and rank == 0:
+                grant = 1  # starvation guard (min_microbatches analogue)
+            n[i] = grant
+            spent += grant
+        return n
+
     def step(self):
-        """One engine iteration: feed each active slot its next token."""
+        """One engine iteration: mixed chunked-prefill + decode."""
+        t0 = time.perf_counter()
         self._admit()
+        n = self._schedule()
         b = len(self.slots)
-        tokens = np.zeros((b, 1), np.int32)
+        c = self.chunk_size if any(
+            n[i] > 0 and self.slots[i].prefilling for i in range(b)
+        ) else 1
+        tokens = np.zeros((b, c), np.int32)
         pos = np.zeros((b,), np.int32)
+        lens = np.asarray(n, np.int32)
+        decode_toks = prefill_toks = deferred = 0
         for i, s in enumerate(self.slots):
-            if s.free:
+            if s.free or n[i] == 0:
+                if not s.free and s.prefilling:
+                    deferred += min(self.chunk_size, len(s.req.prompt) - s.pos)
                 continue
             r = s.req
-            if s.pos < len(r.prompt):  # streaming prefill
-                tokens[i, 0] = r.prompt[s.pos]
-            else:  # decode: feed the last generated token
-                tokens[i, 0] = r.output[-1] if r.output else r.prompt[-1]
             pos[i] = s.pos
+            if s.prefilling:
+                tokens[i, : n[i]] = r.prompt[s.pos : s.pos + n[i]]
+                prefill_toks += n[i]
+                deferred += max(
+                    min(self.chunk_size, len(r.prompt) - s.pos) - n[i], 0
+                )
+            else:
+                tokens[i, 0] = r.output[-1] if r.output else r.prompt[-1]
+                decode_toks += 1
 
-        logits, self.cache = self._step(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos)
+        logits, self.cache = _engine_step(
+            self.params, self.cfg, self.cache, jnp.asarray(tokens),
+            jnp.asarray(pos), jnp.asarray(lens),
         )
-        next_tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        # Synchronize every step (np.asarray blocks on the result).  Load-
+        # bearing beyond sampling: with async dispatch, rebinding the host
+        # token/pos buffers while the step is still in flight corrupts the
+        # computation on jax<=0.4 CPU (observed use-after-free garbage).
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1))  # (B, C)
 
+        now = time.perf_counter()
         for i, s in enumerate(self.slots):
-            if s.free:
+            if s.free or n[i] == 0:
                 continue
             r = s.req
-            s.pos += 1
-            if s.pos >= len(r.prompt):  # this step produced a new token
-                r.output.append(int(next_tok[i]))
+            was_prefilling = s.prefilling
+            s.pos += n[i]
+            if was_prefilling and s.pos < len(r.prompt):
+                continue  # still mid-prompt; no token emitted this step
+            r.output.append(int(next_tok[i, n[i] - 1]))
+            if len(r.output) == 1:
+                r.first_token_at = now
+                r.first_token_step = self.steps
             if r.done or s.pos >= self.max_len:
+                r.finished_at = now
                 self.finished[r.uid] = r
                 s.req = None  # slot becomes available next step
+
+        self.step_stats.append(
+            StepStats(self.steps, decode_toks, prefill_toks, deferred, now - t0)
+        )
+        self.steps += 1
 
     def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
         steps = 0
@@ -118,3 +296,33 @@ class ContinuousBatcher:
             self.step()
             steps += 1
         return self.finished
+
+    # ------------------------------------------------------------------
+    def reset_stats(self):
+        """Clear per-step and per-request accounting (e.g. after warmup).
+
+        The KV cache is left as-is: slots are position-masked, so stale
+        rows from earlier requests are never attended.
+        """
+        assert not self.busy, "reset_stats while requests are in flight"
+        self.steps = 0
+        self.step_stats = []
+        self.finished = {}
+
+    def stats_summary(self) -> Dict[str, float]:
+        """Aggregate engine + latency statistics."""
+        st = self.step_stats
+        done = list(self.finished.values())
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        return {
+            "steps": float(self.steps),
+            "max_step_tokens": float(max((s.scheduled_tokens for s in st), default=0)),
+            "mean_step_tokens": float(
+                np.mean([s.scheduled_tokens for s in st]) if st else 0.0
+            ),
+            "deferred_tokens": float(sum(s.deferred_tokens for s in st)),
+            "max_step_wall": float(max((s.wall_time for s in st), default=0.0)),
+            "finished": float(len(done)),
+            "mean_ttft": float(np.mean(ttfts)) if ttfts else float("nan"),
+            "p99_ttft": float(np.quantile(ttfts, 0.99)) if ttfts else float("nan"),
+        }

@@ -1,0 +1,16 @@
+"""Shared test configuration.
+
+Two lanes (see pytest.ini):
+
+* tier-1 (default): ``python -m pytest -x -q`` — fast correctness gate,
+  excludes tests marked ``slow``.
+* full: ``python -m pytest -q -m "slow or not slow"`` — everything,
+  including per-architecture sweeps and end-to-end serving/training.
+
+``src`` is put on sys.path here so a bare ``pytest`` works without the
+``PYTHONPATH=src`` prefix.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -3,6 +3,7 @@
 Multi-device tests run in a subprocess so the 8 fake host devices never
 leak into the rest of the suite (smoke tests must see 1 device).
 """
+import importlib.util
 import json
 import os
 import subprocess
@@ -14,6 +15,12 @@ import numpy as np
 import pytest
 
 from jax.sharding import PartitionSpec as P
+
+pytestmark = pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType")
+    or importlib.util.find_spec("repro.dist") is None,
+    reason="needs jax>=0.5 (jax.sharding.AxisType) and the repro.dist package",
+)
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

@@ -6,6 +6,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.slow  # full-lane only; tier-1 covers this path via faster tests
+
 
 def rand(shape, dtype, seed):
     x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)

@@ -8,6 +8,8 @@ from repro.models import ModelConfig
 from repro.models.model import decode_step, init_decode_cache, init_params
 from repro.serve import ContinuousBatcher, Request
 
+pytestmark = pytest.mark.slow  # full-lane only; tier-1 covers this path via faster tests
+
 CFG = ModelConfig(
     name="serve-t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
     vocab_size=101, layer_pattern="LG", sliding_window=6, dtype="float32", remat=False,

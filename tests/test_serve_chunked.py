@@ -1,0 +1,221 @@
+"""Chunked-prefill serving engine: equivalence, deadline-drop, admission.
+
+Fast tier-1 coverage for the serving path (the broader end-to-end serve
+suite in test_serve.py runs in the slow lane).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig
+from repro.models.model import (
+    decode_step,
+    init_decode_cache,
+    init_params,
+    prefill_chunk,
+)
+from repro.serve import AdmissionError, ContinuousBatcher, Request
+
+CFG = ModelConfig(
+    name="serve-chunk-t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+    vocab_size=101, layer_pattern="LG", sliding_window=6, dtype="float32", remat=False,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def ref_step(params):
+    """One jitted seed-style decode step, shared across tests."""
+    return jax.jit(lambda c, t, pos: decode_step(params, CFG, c, t, pos))
+
+
+def sequential_reference(params, ref_step, prompt, max_new, max_len):
+    """Seed-style decode: one request alone, token by token (ring cache)."""
+    cache = init_decode_cache(params, CFG, 1, max_len)
+    out = []
+    for t in range(len(prompt) + max_new - 1):
+        cur = prompt[t] if t < len(prompt) else out[-1]
+        logits, cache = ref_step(cache, jnp.asarray([[cur]], jnp.int32), jnp.int32(t))
+        jax.block_until_ready(logits)  # sync before reusing host buffers
+        if t >= len(prompt) - 1:
+            out.append(int(jnp.argmax(logits[0, -1])))
+    return out[:max_new]
+
+
+def run_engine(params, prompts, max_new=4, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_len", 24)
+    eng = ContinuousBatcher(params, CFG, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=max_new))
+    done = eng.run()
+    return eng, {u: r.output for u, r in done.items()}
+
+
+PROMPTS_MODEL = [
+    np.random.default_rng(3).integers(0, 101, size=9).tolist(),
+    np.random.default_rng(4).integers(0, 101, size=5).tolist(),
+]
+
+
+@pytest.fixture(scope="module")
+def streamed_refs(params, ref_step):
+    """Token-streamed logits at each prompt's last position (computed once)."""
+    refs = []
+    for p in PROMPTS_MODEL:
+        cache = init_decode_cache(params, CFG, 1, 24)
+        for t, tok in enumerate(p):
+            lg, cache = ref_step(cache, jnp.asarray([[tok]], jnp.int32), jnp.int32(t))
+            jax.block_until_ready(lg)  # sync before reusing host buffers
+        refs.append(np.asarray(lg[0, 0]))
+    return refs
+
+
+class TestPrefillChunkModel:
+    """Model-level: prefill_chunk == token-streamed decode_step."""
+
+    @pytest.mark.parametrize("chunk", [1, 4, 16])
+    def test_matches_streamed_prefill(self, params, streamed_refs, chunk):
+        prompts = PROMPTS_MODEL
+        b, max_len = len(prompts), 24
+        refs = streamed_refs
+
+        cache = init_decode_cache(params, CFG, b, max_len, linear=True)
+        step = jax.jit(
+            lambda c, toks, pos, lens: prefill_chunk(params, CFG, c, toks, pos, lens)
+        )
+        pos = np.zeros(b, np.int32)
+        last = {}
+        while any(pos[i] < len(prompts[i]) for i in range(b)):
+            toks = np.zeros((b, chunk), np.int32)
+            lens = np.zeros(b, np.int32)
+            for i, p in enumerate(prompts):
+                n = min(chunk, len(p) - pos[i])
+                lens[i] = n
+                toks[i, :n] = p[pos[i]: pos[i] + n]
+            lg, cache = step(cache, jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(lens))
+            jax.block_until_ready(lg)  # sync before reusing host buffers
+            for i, p in enumerate(prompts):
+                if lens[i] and pos[i] + lens[i] == len(p):
+                    last[i] = np.asarray(lg[i, lens[i] - 1])
+                pos[i] += lens[i]
+        for i, r in enumerate(refs):
+            np.testing.assert_allclose(last[i], r, atol=1e-5)
+            assert int(last[i].argmax()) == int(r.argmax())
+
+    def test_recurrent_patterns_rejected(self, params):
+        bad = ModelConfig(name="r", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
+                          d_ff=64, vocab_size=101, layer_pattern="RG",
+                          dtype="float32", remat=False)
+        with pytest.raises(AssertionError, match="attention-only"):
+            prefill_chunk({}, bad, {}, jnp.zeros((1, 4), jnp.int32),
+                          jnp.zeros((1,), jnp.int32), jnp.ones((1,), jnp.int32))
+
+
+class TestChunkedEquivalence:
+    """Engine-level: same tokens for every chunk size, including slot reuse."""
+
+    def test_outputs_identical_across_chunk_sizes(self, params, ref_step):
+        rng = np.random.default_rng(0)
+        # 5 requests through 2 slots: forces slot reuse mid-session
+        prompts = [rng.integers(0, 101, size=n).tolist() for n in (3, 5, 8, 4, 6)]
+        outs = {}
+        for chunk in (1, 4, 16):
+            _, outs[chunk] = run_engine(params, prompts, chunk_size=chunk)
+        assert outs[1] == outs[4] == outs[16]
+        for i, p in enumerate(prompts):
+            ref = sequential_reference(params, ref_step, p, 4, 24)
+            assert outs[16][i] == ref, (i, outs[16][i], ref)
+
+    def test_slot_reuse_no_stale_kv(self, params):
+        """A request admitted into a used slot must not see old KV rows."""
+        rng = np.random.default_rng(1)
+        long_p = rng.integers(0, 101, size=12).tolist()
+        short_p = rng.integers(0, 101, size=3).tolist()
+        # slot is first filled to position 12+4, then reused from position 0
+        _, outs = run_engine(params, [long_p, short_p], batch_slots=1, chunk_size=4)
+        _, fresh = run_engine(params, [short_p], batch_slots=1, chunk_size=4)
+        assert outs[1] == fresh[0]
+
+
+class TestDeadlineDrop:
+    """Per-step compute is bounded; decode never stalls behind a long prompt."""
+
+    def test_budget_bounds_steps_and_decode_progresses(self, params):
+        rng = np.random.default_rng(2)
+        shorts = [rng.integers(0, 101, size=3).tolist() for _ in range(2)]
+        long_p = rng.integers(0, 101, size=96).tolist()
+        budget = 8
+
+        eng = ContinuousBatcher(params, CFG, batch_slots=3, max_len=112,
+                                chunk_size=16, token_budget=budget)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=8)
+                for i, p in enumerate(shorts)]
+        reqs.append(Request(uid=2, prompt=long_p, max_new_tokens=2))
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run()
+        assert sorted(done) == [0, 1, 2]
+
+        # (1) the deadline bounds every step's scheduled compute
+        assert max(s.scheduled_tokens for s in eng.step_stats) <= budget
+        # (2) the long prompt was actually spread over many iterations
+        assert done[2].ttft_steps >= len(long_p) // budget
+        assert sum(s.deferred_tokens for s in eng.step_stats) > 0
+        # (3) decode slots kept making progress while the long prompt was in
+        # flight: both short requests emitted all their tokens and finished
+        # BEFORE the long prompt produced its first token
+        for u in (0, 1):
+            assert done[u].finished_at < done[2].first_token_at
+        # every step between the shorts' first token and their finish
+        # scheduled decode work alongside the capped prefill
+        s0 = done[0].first_token_step
+        for st in eng.step_stats[s0 + 1: s0 + 7]:
+            assert st.decode_tokens >= 1
+            assert st.prefill_tokens >= 1  # starvation guard: prefill advances
+
+        # (4) deferral never changes the generated tokens
+        eng2 = ContinuousBatcher(params, CFG, batch_slots=3, max_len=112,
+                                 chunk_size=16)
+        for i, p in enumerate(shorts):
+            eng2.submit(Request(uid=i, prompt=list(p), max_new_tokens=8))
+        eng2.submit(Request(uid=2, prompt=list(long_p), max_new_tokens=2))
+        done2 = eng2.run()
+        assert {u: r.output for u, r in done.items()} == {
+            u: r.output for u, r in done2.items()
+        }
+
+
+class TestAdmissionAndStats:
+    def test_queue_cap(self, params):
+        eng = ContinuousBatcher(params, CFG, batch_slots=1, max_len=24,
+                                max_queue=2)
+        eng.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=2))
+        eng.submit(Request(uid=1, prompt=[1, 2], max_new_tokens=2))
+        with pytest.raises(AdmissionError):
+            eng.submit(Request(uid=2, prompt=[1, 2], max_new_tokens=2))
+        eng.run()
+        eng.submit(Request(uid=2, prompt=[1, 2], max_new_tokens=2))  # drained
+        assert len(eng.run()) == 3
+
+    def test_rejects_too_long(self, params):
+        eng = ContinuousBatcher(params, CFG, batch_slots=1, max_len=8)
+        with pytest.raises(AssertionError):
+            eng.submit(Request(uid=0, prompt=list(range(7)), max_new_tokens=5))
+
+    def test_latency_stats_populated(self, params):
+        rng = np.random.default_rng(4)
+        eng, _ = run_engine(params, [rng.integers(0, 101, size=6).tolist()],
+                            chunk_size=4)
+        r = eng.finished[0]
+        assert r.submitted_at <= r.first_token_at <= r.finished_at
+        assert r.ttft is not None and r.ttft >= 0
+        assert r.ttft_steps == 2  # 6-token prompt / chunk 4 -> 2 steps
+        s = eng.stats_summary()
+        assert s["finished"] == 1 and s["steps"] == eng.steps
+        assert s["max_step_tokens"] >= 1 and np.isfinite(s["mean_ttft"])

@@ -6,6 +6,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.slow  # full-lane only; tier-1 covers this path via faster tests
+
 
 def make_inputs(bs, nc, l, h, p, n, dtype, seed=0):
     ks = jax.random.split(jax.random.PRNGKey(seed), 5)

@@ -18,6 +18,8 @@ from repro.models.model import init_params, loss_fn
 from repro.optim import adamw, apply_updates
 from repro.train import TrainConfig, train
 
+pytestmark = pytest.mark.slow  # end-to-end training loops; full lane only
+
 TINY = ModelConfig(
     name="tiny", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
     vocab_size=251, dtype="float32", remat=False,

@@ -46,3 +46,44 @@ class TestSelectThreshold:
     def test_shapes_validated(self):
         with pytest.raises(ValueError):
             select_threshold(np.ones((3, 4)), 0.1)
+
+
+class TestWithThresholdMatchesDropMask:
+    """Regression: the simulator and the in-graph mask agree exactly.
+
+    SimResult.with_threshold used to ignore min_microbatches, reporting 0
+    completed micro-batches for tiny tau while drop_mask guarantees >= 1.
+    """
+
+    def test_completed_fraction_agrees_for_all_tau(self):
+        import jax.numpy as jnp
+
+        from repro.core import drop_mask
+
+        sim = profile(workers=4, m=6, iters=20)
+        taus = [0.0, 0.1, 0.5, 1.0, 2.0, 3.0, 1e9]
+        for tau in taus:
+            _, frac = sim.with_threshold(tau)
+            mask = np.asarray(drop_mask(jnp.asarray(sim.t), tau, min_microbatches=1))
+            np.testing.assert_allclose(frac, mask.sum(-1).mean(-1) / sim.t.shape[-1])
+
+    def test_tiny_tau_keeps_min_microbatches(self):
+        sim = profile(workers=4, m=6, iters=10)
+        t_iter, frac = sim.with_threshold(0.0)
+        # every worker still computes its first micro-batch...
+        assert (frac == 1.0 / 6).all()
+        # ...and the iteration lasts as long as the slowest forced micro-batch
+        np.testing.assert_allclose(t_iter, sim.t[:, :, 0].max(axis=-1) + sim.tc)
+
+    def test_min_microbatches_zero_restores_raw_mask(self):
+        sim = profile(workers=4, m=6, iters=10)
+        _, frac = sim.with_threshold(0.0, min_microbatches=0)
+        assert (frac == 0.0).all()
+
+    def test_select_threshold_uses_same_floor(self):
+        """Alg. 2 brute-force pin holds with the floor applied on both sides."""
+        sim = profile(workers=8, m=6, iters=30)
+        grid = np.linspace(0.0, float(sim.T.max()) * 1.1, 64)
+        res = select_threshold(sim.t, sim.tc, grid=grid)
+        brute = np.array([sim.effective_speedup(t) for t in grid])
+        np.testing.assert_allclose(res.speedups, brute, rtol=1e-12)
