@@ -1,0 +1,233 @@
+"""Path-based sharding rules: one table for params, optimizer state, caches.
+
+Every parameter leaf is addressed by its tree path (``stack/groups/0/attn/
+wq``) and matched against a table of *logical* rules keyed by the trailing
+path segments (``attn/wq``).  Rules are written for the un-stacked layer
+shape and **right-aligned** against the actual leaf rank, so the scanned
+variants (``groups/<i>/...`` with a leading n_groups dim) automatically
+get the same spec plus a leading ``None`` — and optimizer moments, whose
+paths are the parameter paths under a ``m``/``v``/``mu`` prefix, match the
+same suffixes for free (ZeRO sharding falls out of the table).
+
+Logical axes:
+
+* ``FSDP = ("data",)`` — parameter/optimizer storage is sharded over the
+  data axis (ZeRO-3); "pod" is deliberately excluded: the pod axis is the
+  pure-DP DropCompute All-Reduce domain, params are replicated across it.
+* ``"model"`` — tensor parallelism, matching the activation layout that
+  ``transformer.constrain_activations`` pins (d_model on "model").
+
+``_fit_spec`` is the legality pass: any mesh axis (or axis group) that
+does not evenly divide its dimension is dropped (outermost first, so
+("pod", "data") degrades to ("data",) before giving up), and an axis is
+never used twice in one spec.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import axes_size, dp_axes
+
+PyTree = Any
+
+FSDP: Tuple[str, ...] = ("data",)
+
+# (path suffix, logical axes for the un-stacked shape), first match wins.
+# Leaves with no matching rule are replicated.
+RULES: Tuple[Tuple[str, Tuple], ...] = (
+    # attention projections: (d, h, hd) / (h, hd, d)
+    ("attn/wq", (FSDP, "model", None)),
+    ("attn/wk", (FSDP, "model", None)),
+    ("attn/wv", (FSDP, "model", None)),
+    ("attn/wo", ("model", None, FSDP)),
+    ("attn/bq", ("model", None)),
+    ("attn/bk", ("model", None)),
+    ("attn/bv", ("model", None)),
+    ("cross_attn/wq", (FSDP, "model", None)),
+    ("cross_attn/wk", (FSDP, "model", None)),
+    ("cross_attn/wv", (FSDP, "model", None)),
+    ("cross_attn/wo", ("model", None, FSDP)),
+    # dense MLP: (d, f) / (f, d)
+    ("mlp/w_in", (FSDP, "model")),
+    ("mlp/w_gate", (FSDP, "model")),
+    ("mlp/w_out", ("model", FSDP)),
+    # MoE router: (d, e) — d-sharded like apply_moe_spmd's in_specs
+    ("moe/router", ("model", None)),
+    # embeddings: (V, d) / (d, V)
+    ("embed/embedding", (FSDP, "model")),
+    ("embed/unembed", (FSDP, "model")),
+    ("embed/pos_embedding", (None, "model")),
+    ("encoder/pos_embedding", (None, "model")),
+    # RG-LRU (recurrentgemma): (d, dr) / (dr, d) / per-channel vectors
+    ("rglru/w_branch", (FSDP, "model")),
+    ("rglru/w_gate_branch", (FSDP, "model")),
+    ("rglru/w_out", ("model", FSDP)),
+    ("rglru/conv_w", (None, "model")),
+    ("rglru/conv_b", ("model",)),
+    ("rglru/gate_a_w", ("model",)),
+    ("rglru/gate_a_b", ("model",)),
+    ("rglru/gate_x_w", ("model",)),
+    ("rglru/gate_x_b", ("model",)),
+    ("rglru/lam", ("model",)),
+    # Mamba-2 SSD: (d, proj) / (di, d) / per-channel vectors
+    ("ssd/w_in", (FSDP, "model")),
+    ("ssd/w_out", ("model", FSDP)),
+    ("ssd/conv_w", (None, "model")),
+    ("ssd/conv_b", ("model",)),
+    ("ssd/norm_scale", ("model",)),
+)
+
+
+def _moe_expert_axes(leaf: str, shape: Sequence[int]) -> Optional[Tuple]:
+    """Expert-TP factorization, shape-selected to mirror ``apply_moe_spmd``:
+
+    d_psum (f < d, qwen3-like): contract the d-slice, psum — shard d;
+    ag_f   (f >= d, mixtral-like): f-sharded experts — shard f.
+    In both, the model axis lands on the *larger* of the two trailing dims;
+    the expert dim is FSDP storage.
+    """
+    if len(shape) < 3:
+        return None
+    if leaf in ("w_in", "w_gate"):  # (e, d, f)
+        d, f = shape[-2], shape[-1]
+        return (FSDP, None, "model") if f >= d else (FSDP, "model", None)
+    if leaf == "w_out":  # (e, f, d)
+        f, d = shape[-2], shape[-1]
+        return (FSDP, "model", None) if f >= d else (FSDP, None, "model")
+    return None
+
+
+def _logical_axes(segs: Sequence[str], shape: Sequence[int]) -> Optional[Tuple]:
+    if len(segs) >= 2 and segs[-2] == "moe":
+        axes = _moe_expert_axes(segs[-1], shape)
+        if axes is not None:
+            return axes
+    for key, axes in RULES:
+        ks = key.split("/")
+        if len(segs) >= len(ks) and list(segs[-len(ks):]) == ks:
+            return axes
+    return None
+
+
+def _fit_spec(shape: Sequence[int], axes: Sequence, mesh) -> P:
+    """Drop mesh axes that don't divide their dim (outermost first) or were
+    already used by an earlier dim; single-name entries keep their form."""
+    used: set = set()
+    out = []
+    for dim, entry in zip(shape, axes):
+        if entry is None:
+            out.append(None)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        names = tuple(n for n in names if n in mesh.shape and n not in used)
+        while names and dim % axes_size(mesh, names) != 0:
+            names = names[1:]
+        if not names:
+            out.append(None)
+        elif isinstance(entry, str):
+            out.append(names[0])
+            used.add(names[0])
+        else:
+            out.append(names)
+            used.update(names)
+    return P(*out)
+
+
+def spec_for_path(path: str, shape: Sequence[int], mesh) -> P:
+    """PartitionSpec for one leaf, from its tree path and shape.
+
+    The rule's logical axes are right-aligned against ``shape`` (leading
+    dims get ``None`` — covers scanned/stacked ``groups/<i>/...`` leaves)
+    and then legality-fitted to the mesh by ``_fit_spec``.
+    """
+    segs = [s for s in str(path).split("/") if s]
+    axes = _logical_axes(segs, shape)
+    if axes is None:
+        return P()
+    axes = tuple(axes)
+    if len(axes) >= len(shape):
+        axes = axes[len(axes) - len(shape):]
+    else:
+        axes = (None,) * (len(shape) - len(axes)) + axes
+    return _fit_spec(shape, axes, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Tree-level shardings
+# ---------------------------------------------------------------------------
+
+
+def _path_str(key_path) -> str:
+    segs = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            segs.append(str(k.key))
+        elif hasattr(k, "idx"):
+            segs.append(str(k.idx))
+        elif hasattr(k, "name"):
+            segs.append(str(k.name))
+        else:
+            segs.append(str(k))
+    return "/".join(segs)
+
+
+def tree_shardings(tree: PyTree, mesh) -> PyTree:
+    """NamedSharding for every leaf of ``tree`` via ``spec_for_path``.
+
+    Works on concrete arrays and ``ShapeDtypeStruct`` trees alike; leaves
+    with no matching path rule come out replicated.
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: NamedSharding(mesh, spec_for_path(_path_str(kp), x.shape, mesh)),
+        tree,
+    )
+
+
+def param_shardings(params: PyTree, mesh) -> PyTree:
+    return tree_shardings(params, mesh)
+
+
+def opt_shardings(opt_state: PyTree, mesh) -> PyTree:
+    """Optimizer-state shardings (ZeRO): moment trees mirror the parameter
+    paths under a ``m``/``v``/``mu`` prefix, so the same suffix rules apply;
+    scalar counters fall through to replicated."""
+    return tree_shardings(opt_state, mesh)
+
+
+def cache_shardings(cache: PyTree, mesh, shard_seq: bool = False) -> PyTree:
+    """Decode-cache shardings.
+
+    Default: batch (dim 0) over the data axes, heads/channels over "model"
+    (KV leaves ``k``/``v`` are (B, S, kv_heads, hd): "model" lands on the
+    head dim; recurrent/conv states get "model" on their channel dim).
+
+    ``shard_seq=True``: shard the KV *sequence* dim over "data" instead of
+    batch — for long-context decode where global_batch < dp_size (e.g.
+    long_500k's single sequence on the production mesh).
+    """
+    dp = dp_axes(mesh)
+
+    def leaf(kp, x):
+        name = _path_str(kp).rsplit("/", 1)[-1]
+        nd = len(x.shape)
+        if name in ("k", "v") and nd == 4:
+            axes = (None, ("data",), "model", None) if shard_seq else (dp, None, "model", None)
+        elif nd >= 2:
+            axes = (dp,) + (None,) * (nd - 2) + ("model",)
+        else:
+            axes = (dp,)
+        return NamedSharding(mesh, _fit_spec(x.shape, axes, mesh))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def batch_spec(mesh, global_batch: int) -> P:
+    """Leading-dim spec for the global batch: over ("pod", "data") when the
+    pod axis exists, degrading outermost-first until it divides."""
+    dp = dp_axes(mesh)
+    while dp and global_batch % axes_size(mesh, dp) != 0:
+        dp = dp[1:]
+    return P(dp if dp else None)

@@ -31,8 +31,7 @@ import jax.numpy as jnp
 from repro.configs import ARCHITECTURES, get_config
 from repro.launch import hlo_cost
 from repro.core.dropcompute import DropConfig
-from repro.dist.sharding import cache_shardings, opt_shardings, param_shardings
-from repro.launch.mesh import HW, make_production_mesh
+from repro.dist import HW, Distribution
 from repro.launch import steps as S
 from repro.models import INPUT_SHAPES
 
@@ -89,13 +88,15 @@ def parse_collectives(hlo_text: str) -> dict:
 def lower_combo(
     arch: str,
     shape_name: str,
-    mesh,
+    dist: Distribution,
     multi_pod: bool,
     drop_tau: float = float("inf"),
     cast_once: bool = False,
     microbatches: int = 0,
+    lower_only: bool = False,
 ):
-    """Lower + compile one (arch, shape, mesh). Returns result dict.
+    """Lower (+ compile, unless ``lower_only``) one (arch, shape, mesh)
+    through the ``repro.dist`` step builders. Returns result dict.
 
     ``cast_once``/``microbatches`` are §Perf hillclimb knobs.
     """
@@ -103,7 +104,6 @@ def lower_combo(
 
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
-    n_workers = S.dp_size(mesh)
     if shape.mode == "train" and get_config(arch).param_count() > 50e9 and not multi_pod:
         # single-pod giants: 16 accumulations (paper uses 12) halve the
         # per-micro-batch activation footprint
@@ -111,51 +111,35 @@ def lower_combo(
     if microbatches and shape.mode == "train":
         shape = dataclasses.replace(shape, microbatches=microbatches)
 
-    params_abs = S.abstract_params(cfg)
-    p_sh = param_shardings(params_abs, mesh)
-    specs = S.input_specs(cfg, shape, mesh)
-    b_sh = S.batch_shardings(cfg, shape, mesh)
-
     t0 = time.time()
-    with mesh:
-        moe_impl = "spmd" if cfg.n_experts > 0 else "sort"
-        # >50B models: bf16 Adam moments + bf16 grad accumulators — required
-        # to fit 16 GB/chip state bytes at 235B params / 256 chips (see
-        # EXPERIMENTS.md §Dry-run notes).
-        big = cfg.param_count() > 50e9
-        dt = jnp.bfloat16 if big else jnp.float32
-        if shape.mode == "train":
-            drop = DropConfig(enabled=True, tau=drop_tau, normalize="computed")
-            opt, step = S.make_train_step(
-                cfg, shape, drop, n_workers, moe_impl=moe_impl,
-                state_dtype=dt, accum_dtype=dt, cast_params_once=cast_once,
-            )
-            opt_abs = S.abstract_opt_state(cfg, opt, params_abs)
-            o_sh = opt_shardings(opt_abs, mesh)
-            jitted = jax.jit(
-                step,
-                in_shardings=(p_sh, o_sh, b_sh["batch"], b_sh["latencies"]),
-                out_shardings=(p_sh, o_sh, None),
-                donate_argnums=(0, 1),
-            )
-            lowered = jitted.lower(params_abs, opt_abs, specs["batch"], specs["latencies"])
-        elif shape.mode == "prefill":
-            step = S.make_prefill_step(cfg, moe_impl=moe_impl)
-            jitted = jax.jit(step, in_shardings=(p_sh, b_sh["batch"]))
-            lowered = jitted.lower(params_abs, specs["batch"])
-        else:  # decode
-            step = S.make_serve_step(cfg)
-            cache_abs = S.abstract_cache(cfg, shape)
-            shard_seq = shape.global_batch < S.dp_size(mesh)
-            c_sh = cache_shardings(cache_abs, mesh, shard_seq=shard_seq)
-            jitted = jax.jit(
-                step,
-                in_shardings=(p_sh, c_sh, b_sh["token"], b_sh["pos"]),
-                out_shardings=(None, c_sh),
-                donate_argnums=(1,),
-            )
-            lowered = jitted.lower(params_abs, cache_abs, specs["token"], specs["pos"])
+    moe_impl = "spmd" if cfg.n_experts > 0 else "sort"
+    # >50B models: bf16 Adam moments + bf16 grad accumulators — required
+    # to fit 16 GB/chip state bytes at 235B params / 256 chips (see
+    # EXPERIMENTS.md §Dry-run notes).
+    big = cfg.param_count() > 50e9
+    dt = jnp.bfloat16 if big else jnp.float32
+    if shape.mode == "train":
+        drop = DropConfig(enabled=True, tau=drop_tau, normalize="computed")
+        bundle = dist.train_step(
+            cfg, shape, drop, moe_impl=moe_impl,
+            state_dtype=dt, accum_dtype=dt, cast_params_once=cast_once,
+        )
+    elif shape.mode == "prefill":
+        bundle = dist.prefill_step(cfg, shape, moe_impl=moe_impl)
+    else:  # decode
+        bundle = dist.serve_step(cfg, shape)
+    lowered = bundle.lower()
     t_lower = time.time() - t0
+
+    if lower_only:
+        return {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": "x".join(str(s) for s in dist.mesh.devices.shape),
+            "mode": shape.mode,
+            "lower_s": round(t_lower, 1),
+            "lower_only": True,
+        }
 
     t0 = time.time()
     compiled = lowered.compile()
@@ -163,10 +147,13 @@ def lower_combo(
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax 0.4 returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = parse_collectives(hlo)
     walked = hlo_cost.analyze(hlo)  # trip-count-aware (scans multiplied)
 
+    mesh = dist.mesh
     n_chips = mesh.devices.size
     result = {
         "arch": arch,
@@ -215,6 +202,8 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--lower-only", action="store_true",
+                    help="stop after lowering (no XLA compile) — CI smoke")
     ap.add_argument("--tag", default="", help="suffix for result files (perf iterations)")
     args = ap.parse_args()
 
@@ -229,17 +218,21 @@ def main():
 
     failures = []
     for multi_pod in meshes:
-        mesh = make_production_mesh(multi_pod=multi_pod)
+        dist = Distribution.production(multi_pod=multi_pod)
         mesh_tag = "2x16x16" if multi_pod else "16x16"
         for arch, shape_name in todo:
             name = f"{arch}_{shape_name}_{mesh_tag}{args.tag}.json"
             out_path = RESULTS_DIR / name
-            if out_path.exists() and not args.force:
+            if out_path.exists() and not args.force and not args.lower_only:
                 print(f"[skip] {name} (cached)")
                 continue
             print(f"[run ] {arch} x {shape_name} on {mesh_tag} ...", flush=True)
             try:
-                res = lower_combo(arch, shape_name, mesh, multi_pod)
+                res = lower_combo(arch, shape_name, dist, multi_pod,
+                                  lower_only=args.lower_only)
+                if args.lower_only:
+                    print(f"  ok: lowered in {res['lower_s']}s (no compile)")
+                    continue
                 out_path.write_text(json.dumps(res, indent=1))
                 per_dev = res["memory"]
                 total_fit = (per_dev["output_bytes"] + per_dev["temp_bytes"] + per_dev["argument_bytes"])
@@ -260,7 +253,8 @@ def main():
         for f in failures:
             print(" ", f)
         raise SystemExit(1)
-    print("\nAll dry-run combos compiled successfully.")
+    print("\nAll dry-run combos %s successfully."
+          % ("lowered" if args.lower_only else "compiled"))
 
 
 if __name__ == "__main__":

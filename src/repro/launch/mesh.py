@@ -1,40 +1,28 @@
-"""Production mesh definitions (TPU v5e target).
+"""Compatibility shim — mesh construction moved to ``repro.dist.mesh``.
 
-Single pod: 16 x 16 = 256 chips, axes (data, model).
-Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — pure DP
-across the "pod" axis (the DropCompute All-Reduce domain spans pods).
-
-Functions, not module-level constants: importing this module must never
-touch jax device state (the dry-run sets XLA_FLAGS before first init).
+Kept so existing imports (``repro.launch.mesh.make_dev_mesh`` etc.)
+continue to work; new code should import from ``repro.dist``.
 """
-from __future__ import annotations
+from ..dist.mesh import (  # noqa: F401
+    HW,
+    axes_size,
+    axis_types_kwargs,
+    dp_axes,
+    dp_size,
+    make_dev_mesh,
+    make_mesh,
+    make_production_mesh,
+    tp_size,
+)
 
-import jax
-
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
-
-
-def make_dev_mesh(n_devices: int | None = None, model_parallel: int = 1):
-    """Small mesh over whatever devices exist (CPU tests / laptops)."""
-    n = n_devices or len(jax.devices())
-    assert n % model_parallel == 0
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel), ("data", "model"), axis_types=_auto(2)
-    )
-
-
-# TPU v5e hardware constants (per chip) — used by the roofline analysis.
-HW = {
-    "name": "tpu_v5e",
-    "peak_flops_bf16": 197e12,  # FLOP/s
-    "hbm_bandwidth": 819e9,  # B/s
-    "ici_link_bandwidth": 50e9,  # B/s per link
-}
+__all__ = [
+    "HW",
+    "axes_size",
+    "axis_types_kwargs",
+    "dp_axes",
+    "dp_size",
+    "make_dev_mesh",
+    "make_mesh",
+    "make_production_mesh",
+    "tp_size",
+]

@@ -10,6 +10,13 @@ KV/state cache (decode_32k, long_500k shapes).
 
 ``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
 shardable, zero allocation) for every model input.
+
+The step builders here are *pure*: they return plain functions.  Sharded,
+jitted, donation-aware packaging — in/out shardings from the path rules,
+abstract inputs for lowering — is ``repro.dist.Distribution``'s job
+(``dist.train_step`` / ``dist.prefill_step`` / ``dist.serve_step``);
+``make_train_step`` accepts a ``Distribution`` in place of an explicit
+worker count so callers never thread ``mesh``/``n_workers`` by hand.
 """
 from __future__ import annotations
 
@@ -21,7 +28,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.dropcompute import DropConfig, drop_mask
-from ..dist.sharding import batch_spec
+from ..dist import mesh as mesh_lib
+from ..dist.sharding import _fit_spec, batch_spec
 from ..models import ModelConfig, InputShape, decode_step, init_decode_cache, init_params, loss_fn
 from ..models import model as model_lib
 from ..optim import apply_updates, clip_by_global_norm, make as make_opt
@@ -34,17 +42,20 @@ PyTree = Any
 # ---------------------------------------------------------------------------
 
 
+def _as_mesh(mesh_or_dist):
+    """Accept a Mesh or a ``Distribution`` wherever a mesh is expected."""
+    return getattr(mesh_or_dist, "mesh", mesh_or_dist)
+
+
 def dp_size(mesh) -> int:
-    n = 1
-    for a in ("pod", "data"):
-        n *= mesh.shape.get(a, 1)
-    return n
+    return mesh_lib.dp_size(_as_mesh(mesh))
 
 
 def input_specs(
     cfg: ModelConfig, shape: InputShape, mesh=None, n_workers: Optional[int] = None
 ) -> Dict[str, jax.ShapeDtypeStruct]:
     """Abstract model inputs for one workload shape (no allocation)."""
+    mesh = _as_mesh(mesh)
     b, s = shape.global_batch, shape.seq_len
     f32, i32 = jnp.float32, jnp.int32
     sds = jax.ShapeDtypeStruct
@@ -109,7 +120,7 @@ def make_train_step(
     cfg: ModelConfig,
     shape: InputShape,
     drop: DropConfig,
-    n_workers: int,
+    n_workers: Optional[int] = None,
     optimizer: str = "adamw",
     lr: float = 1e-4,
     clip_norm: float = 1.0,
@@ -117,8 +128,15 @@ def make_train_step(
     state_dtype=jnp.float32,
     accum_dtype=jnp.float32,
     cast_params_once: bool = False,
+    weight_decay: Optional[float] = None,
+    dist=None,
 ):
     """Returns (opt, step_fn(params, opt_state, batch, latencies)).
+
+    ``n_workers`` (the DropCompute worker count W) may be given explicitly
+    or derived from ``dist`` (a ``repro.dist.Distribution``): one virtual
+    worker per data shard.  Use ``dist.train_step(...)`` for the jitted,
+    sharded version of this step.
 
     ``state_dtype``/``accum_dtype`` let >100B models halve their Adam
     moments / gradient-accumulator footprint (bf16) on 16 GB chips.
@@ -129,7 +147,14 @@ def make_train_step(
     + remat recompute).  Gradients are then computed w.r.t. the bf16 copy
     and accumulated in ``accum_dtype`` — a §Perf hillclimb lever.
     """
-    opt = make_opt(optimizer, lr, state_dtype=state_dtype) if optimizer == "adamw" else make_opt(optimizer, lr)
+    if n_workers is None:
+        if dist is None:
+            raise TypeError("make_train_step needs n_workers= or dist=")
+        n_workers = dist.dp_size
+    opt_kw = {} if weight_decay is None else {"weight_decay": weight_decay}
+    if optimizer == "adamw":
+        opt_kw["state_dtype"] = state_dtype
+    opt = make_opt(optimizer, lr, **opt_kw)
     m = shape.microbatches
     b = shape.global_batch
     assert b % (n_workers * m) == 0, (b, n_workers, m)
@@ -234,18 +259,24 @@ def make_serve_step(cfg: ModelConfig, moe_impl: str = "dense"):
 # ---------------------------------------------------------------------------
 
 
-def batch_shardings(cfg: ModelConfig, shape: InputShape, mesh) -> PyTree:
+def batch_shardings(
+    cfg: ModelConfig, shape: InputShape, mesh, n_workers: Optional[int] = None
+) -> PyTree:
+    mesh = _as_mesh(mesh)
     bs = batch_spec(mesh, shape.global_batch)
 
     def leaf_spec(x):
         return NamedSharding(mesh, P(bs[0], *([None] * (len(x.shape) - 1))))
 
-    specs = input_specs(cfg, shape, mesh)
+    specs = input_specs(cfg, shape, mesh, n_workers=n_workers)
     out: Dict[str, Any] = {}
     if "batch" in specs:
         out["batch"] = jax.tree.map(leaf_spec, specs["batch"])
     if "latencies" in specs:
-        out["latencies"] = NamedSharding(mesh, P(bs[0], None))
+        # (W, M): W need not be divisible by the dp size even when the
+        # global batch is — fit the spec to the latencies' own shape
+        lat_shape = specs["latencies"].shape
+        out["latencies"] = NamedSharding(mesh, _fit_spec(lat_shape, (bs[0], None), mesh))
     if "token" in specs:
         out["token"] = NamedSharding(mesh, P(bs[0], None))
         out["pos"] = NamedSharding(mesh, P())

@@ -5,10 +5,12 @@
 
 Selects an architecture from the registry (``--arch``, full or ``--smoke``
 reduced config), builds the data pipeline and the DropCompute trainer, and
-runs.  On a multi-device system pass ``--mesh data,model`` dims to shard
-via the production sharding rules; on CPU it runs the virtual-worker
-simulation path (the physical-cluster behaviour is exercised by the
-dry-run, ``repro.launch.dryrun``).
+runs.  On a multi-device system pass ``--mesh`` data,model dims (e.g.
+``--mesh 4,2``, or ``--mesh 2,16,16`` for pod,data,model) to run the
+sharded SPMD step via the ``repro.dist`` sharding rules; without it the
+virtual-worker simulation path runs on a single device (the
+physical-cluster behaviour is exercised by the dry-run,
+``repro.launch.dryrun``).
 """
 import argparse
 
@@ -17,6 +19,7 @@ import numpy as np
 from repro.configs import ARCHITECTURES, PAPER_MODELS, get_config, get_smoke_config
 from repro.core import DropConfig, LatencyModel, NoiseModel
 from repro.data import DataConfig
+from repro.dist import Distribution
 from repro.train import TrainConfig, train
 
 
@@ -42,11 +45,17 @@ def main():
     ap.add_argument("--tc", type=float, default=0.5)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="",
+                    help="mesh dims: 'data,model' (e.g. 4,2) or "
+                         "'pod,data,model' (e.g. 2,16,16); empty = "
+                         "single-device virtual-worker path")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    dist = Distribution.from_spec(args.mesh) if args.mesh else None
     print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
-          f"family={cfg.family} pattern={cfg.layer_pattern}")
+          f"family={cfg.family} pattern={cfg.layer_pattern}"
+          + (f" mesh={'x'.join(map(str, dist.mesh.devices.shape))}" if dist else ""))
 
     data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                       batch_size=args.batch, strategy="pack", seed=args.seed)
@@ -56,7 +65,7 @@ def main():
         drop=DropConfig(enabled=args.drop_compute, tau=args.tau, normalize=args.normalize),
         auto_threshold=args.auto_threshold, calibration_steps=min(20, args.steps // 2),
         latency=LatencyModel(base=0.45, noise=NoiseModel(kind=args.noise)),
-        tc=args.tc, seed=args.seed,
+        tc=args.tc, seed=args.seed, mesh=dist,
         ckpt_dir=args.ckpt or None, ckpt_every=50 if args.ckpt else 0,
     )
     r = train(cfg, data, tcfg)

@@ -140,6 +140,10 @@ class ContinuousBatcher:
         chunk for every prefilling slot).
       max_queue: admission control — ``submit`` raises ``AdmissionError``
         once this many requests are waiting for a slot.  None = unbounded.
+      dist: optional ``repro.dist.Distribution`` — shards the decode cache
+        (slots over the data axes, KV heads over "model") and the params
+        by the path-based rules; the jitted engine step then partitions
+        from the committed input shardings.  None = local placement.
     """
 
     def __init__(
@@ -151,6 +155,7 @@ class ContinuousBatcher:
         chunk_size: int = 16,
         token_budget: Optional[int] = None,
         max_queue: Optional[int] = None,
+        dist=None,
     ):
         assert chunk_size >= 1
         assert token_budget is None or token_budget >= 1
@@ -159,6 +164,9 @@ class ContinuousBatcher:
             f"ContinuousBatcher needs an attention-only pattern (got "
             f"{cfg.pattern!r}); recurrent/SSM models decode via decode_step"
         )
+        self.dist = dist
+        if dist is not None:
+            params = dist.shard(params)
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
@@ -166,7 +174,17 @@ class ContinuousBatcher:
         self.token_budget = token_budget
         self.max_queue = max_queue
         self.slots = [_Slot() for _ in range(batch_slots)]
-        self.cache = init_decode_cache(params, cfg, batch_slots, max_len, linear=True)
+        build = functools.partial(
+            init_decode_cache, params, cfg, batch_slots, max_len, linear=True
+        )
+        if dist is None:
+            self.cache = build()
+        else:
+            # materialize directly into the sharded layout — building the
+            # full cache on one device first would peak at the unsharded
+            # size, the very thing sharding is for
+            c_sh = dist.cache_shardings(jax.eval_shape(build))
+            self.cache = jax.jit(build, out_shardings=c_sh)()
         self.queue: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self.steps = 0

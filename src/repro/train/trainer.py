@@ -26,8 +26,9 @@ from ..core.dropcompute import DropConfig, accumulate_grads, drop_mask
 from ..core.engine import make_grad_fn
 from ..core.simulate import LatencyModel
 from ..core.threshold import select_threshold
-from ..data.synthetic import DataConfig, microbatches_at
-from ..models import ModelConfig, init_params, loss_fn
+from ..data.synthetic import DataConfig, batch_at, microbatches_at
+from ..dist import Distribution
+from ..models import InputShape, ModelConfig, init_params, loss_fn
 from ..optim import apply_updates, clip_by_global_norm, make as make_opt
 from . import checkpoint as ckpt
 
@@ -50,6 +51,10 @@ class TrainConfig:
     tc: float = 0.5  # serial/communication seconds per iteration
     calibration_steps: int = 20  # Algorithm 2 profiling window
     auto_threshold: bool = False
+    # Distribution: None = single-device virtual-worker loop; a mesh spec
+    # ("4,2", a dim tuple, or a repro.dist.Distribution) switches to the
+    # sharded SPMD step built by ``Distribution.train_step``.
+    mesh: Optional[Any] = None
     # bookkeeping
     log_every: int = 10
     ckpt_dir: Optional[str] = None
@@ -68,6 +73,17 @@ class TrainResult:
     @property
     def cum_time(self) -> np.ndarray:
         return np.cumsum(self.sim_times)
+
+
+def _resolve_dist(mesh) -> Optional[Distribution]:
+    """None | "4,2" | (4, 2) | Mesh | Distribution -> Optional[Distribution]."""
+    if mesh is None:
+        return None
+    if isinstance(mesh, Distribution):
+        return mesh
+    if isinstance(mesh, jax.sharding.Mesh):
+        return Distribution(mesh)
+    return Distribution.from_spec(mesh)
 
 
 def _make_step(model_cfg: ModelConfig, tcfg: TrainConfig, lr_fn):
@@ -104,8 +120,34 @@ def train(
 
     if params is None:
         params = init_params(jax.random.PRNGKey(tcfg.seed), model_cfg)
-    opt, step_fn = _make_step(model_cfg, tcfg, lambda s: tcfg.lr)
-    opt_state = opt.init(params)
+
+    # --- distribution: resolve the SPMD path up front --------------------
+    dist = _resolve_dist(tcfg.mesh)
+    bundle = None
+    if dist is not None:
+        shape = InputShape(
+            "train_cli", data_cfg.seq_len, data_cfg.batch_size, "train",
+            microbatches=m,
+        )
+
+        def build_bundle(tau_now: float):
+            drop = dataclasses.replace(tcfg.drop, tau=tau_now)
+            # sgd: no decay, mirroring _make_step's single-device path —
+            # the same TrainConfig must train identically on both paths
+            wd = None if tcfg.optimizer == "sgd" else tcfg.weight_decay
+            return dist.train_step(
+                model_cfg, shape, drop, n_workers=n,
+                optimizer=tcfg.optimizer, lr=tcfg.lr,
+                clip_norm=tcfg.clip_norm, weight_decay=wd,
+            )
+
+        bundle = build_bundle(tcfg.drop.tau)
+        opt = bundle.opt
+        params = dist.shard(params)
+        opt_state = opt.init(params)
+    else:
+        opt, step_fn = _make_step(model_cfg, tcfg, lambda s: tcfg.lr)
+        opt_state = opt.init(params)
 
     lat_rng = np.random.default_rng(tcfg.seed + 1)
     tau = tcfg.drop.tau
@@ -113,8 +155,12 @@ def train(
 
     losses, sim_times, drops = [], [], []
     for step in range(tcfg.steps):
-        mbs = microbatches_at(step, data_cfg, total_m)
-        mbs = {k: jnp.asarray(v) for k, v in mbs.items() if k != "lengths"}
+        if dist is None:
+            mbs = microbatches_at(step, data_cfg, total_m)
+            mbs = {k: jnp.asarray(v) for k, v in mbs.items() if k != "lengths"}
+        else:
+            b = batch_at(step, data_cfg)
+            mbs = {k: jnp.asarray(b[k]) for k in ("tokens", "weights")}
 
         # --- latency draws for the N virtual workers (Algorithm 1 input) ---
         t = tcfg.latency.sample(lat_rng, 1, n, m)[0]  # (N, M)
@@ -130,6 +176,10 @@ def train(
             prof = np.stack(profile)  # (I, N, M)
             res = select_threshold(prof, tcfg.tc)
             tau = res.tau
+            if bundle is not None:
+                # tau is baked into the traced drop mask: rebuild (one
+                # recompile per calibration, not per step)
+                bundle = build_bundle(tau)
 
         # --- drop mask (per worker), flattened onto the microbatch axis ---
         if tcfg.drop.enabled and np.isfinite(tau):
@@ -138,9 +188,14 @@ def train(
             )
         else:
             mask_nm = np.ones((n, m), np.float32)
-        mask = jnp.asarray(mask_nm.reshape(total_m))
 
-        params, opt_state, loss, stats = step_fn(params, opt_state, mbs, mask)
+        if bundle is not None:
+            params, opt_state, metrics = bundle(params, opt_state, mbs, jnp.asarray(t))
+            loss = metrics["loss"]
+            stats = {"completed_fraction": metrics["completed_fraction"]}
+        else:
+            mask = jnp.asarray(mask_nm.reshape(total_m))
+            params, opt_state, loss, stats = step_fn(params, opt_state, mbs, mask)
 
         # --- simulated iteration time (eq. in §4.3) ---
         t_workers = (t * mask_nm).sum(axis=-1)  # compute actually performed

@@ -2,6 +2,10 @@
 
 Multi-device tests run in a subprocess so the 8 fake host devices never
 leak into the rest of the suite (smoke tests must see 1 device).
+
+Meshes are built through ``repro.dist.mesh.make_mesh``, the jax-0.4/0.5
+compat helper, so this module *executes* on jax 0.4.x (no
+``jax.sharding.AxisType``) instead of skipping forever.
 """
 import importlib.util
 import json
@@ -17,9 +21,8 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 pytestmark = pytest.mark.skipif(
-    not hasattr(jax.sharding, "AxisType")
-    or importlib.util.find_spec("repro.dist") is None,
-    reason="needs jax>=0.5 (jax.sharding.AxisType) and the repro.dist package",
+    importlib.util.find_spec("repro.dist") is None,
+    reason="needs the repro.dist package",
 )
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -39,9 +42,8 @@ def run_sub(code: str) -> str:
 
 class TestShardingRules:
     def setup_method(self):
-        from repro.launch.mesh import make_dev_mesh  # 1 device mesh ok
-        self.mesh = jax.make_mesh((1, 1), ("data", "model"),
-                                  axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.dist.mesh import make_mesh  # 1 device mesh ok
+        self.mesh = make_mesh((1, 1), ("data", "model"))
 
     def test_spec_paths(self):
         from repro.dist.sharding import spec_for_path
@@ -59,8 +61,8 @@ class TestShardingRules:
 
     def test_nondivisible_axis_dropped(self):
         from repro.dist.sharding import _fit_spec
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.dist.mesh import make_mesh
+        mesh = make_mesh((1, 1), ("data", "model"))
         # dims divisible by 1 always -> axes kept; use fake sizes via spec test
         sp = _fit_spec((7,), ("model",), mesh)
         assert sp == P("model")  # size-1 axis always divides
@@ -70,10 +72,10 @@ class TestMultiDevice:
     def test_spmd_moe_matches_dense(self):
         out = run_sub("""
             import jax, jax.numpy as jnp
+            from repro.dist.mesh import make_mesh
             from repro.models.config import ModelConfig
             from repro.models.moe import init_moe, apply_moe_spmd, apply_moe_dense
-            mesh = jax.make_mesh((4, 2), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = make_mesh((4, 2), ("data", "model"))
             cfg = ModelConfig(name='m', d_model=32, d_ff=64, n_experts=4, top_k=2,
                               capacity_factor=8.0, dtype='float32')
             p = init_moe(jax.random.PRNGKey(0), cfg)
@@ -90,10 +92,10 @@ class TestMultiDevice:
         """f < d selects the d_psum expert-TP factorization (qwen3-like)."""
         out = run_sub("""
             import jax, jax.numpy as jnp
+            from repro.dist.mesh import make_mesh
             from repro.models.config import ModelConfig
             from repro.models.moe import init_moe, apply_moe_spmd, apply_moe_dense
-            mesh = jax.make_mesh((4, 2), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = make_mesh((4, 2), ("data", "model"))
             cfg = ModelConfig(name='m', d_model=64, d_ff=32, n_experts=4, top_k=2,
                               capacity_factor=8.0, dtype='float32')
             p = init_moe(jax.random.PRNGKey(0), cfg)
@@ -115,13 +117,13 @@ class TestMultiDevice:
             from repro.models.model import init_params
             from repro.core.dropcompute import DropConfig
             from repro.launch import steps as S
+            from repro.dist.mesh import make_mesh
             from repro.dist.sharding import param_shardings, opt_shardings
 
             cfg = ModelConfig(name='t', n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
                               d_ff=64, vocab_size=101, dtype='float32', remat=False)
             shape = InputShape('t', 16, 8, 'train', microbatches=2)
-            mesh = jax.make_mesh((4, 2), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = make_mesh((4, 2), ("data", "model"))
             params = init_params(jax.random.PRNGKey(0), cfg)
             drop = DropConfig(enabled=True, tau=1.5)
             lat = jnp.ones((4, 2), jnp.float32)  # each worker: keep 1 of 2
@@ -159,14 +161,14 @@ class TestMultiDevice:
             from repro.models.config import ModelConfig, InputShape
             from repro.core.dropcompute import DropConfig
             from repro.launch import steps as S
+            from repro.dist.mesh import make_mesh
             from repro.dist.sharding import param_shardings, opt_shardings
             from repro.models.model import init_params
 
             cfg = ModelConfig(name='t', n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
                               d_ff=64, vocab_size=101, dtype='float32', remat=False)
             shape = InputShape('t', 16, 16, 'train', microbatches=2)
-            mesh = jax.make_mesh((8, 1), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = make_mesh((8, 1), ("data", "model"))
             pa = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
             opt, step = S.make_train_step(cfg, shape, DropConfig(enabled=False), n_workers=8)
             oa = jax.eval_shape(opt.init, pa)

@@ -1,0 +1,50 @@
+"""Import sweep: every ``repro.*`` module must import.
+
+A phantom dependency (a module importing a package that doesn't exist —
+exactly how ``repro.dist`` was dead-referenced by ``launch/steps.py`` for
+a while) can never land silently again: this walks the whole package and
+imports each module in one subprocess.
+
+A subprocess because ``repro.launch.dryrun`` mutates ``XLA_FLAGS`` at
+import (512 fake devices) — that must not leak into this process or any
+test that forks later.
+"""
+import os
+import pkgutil
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def iter_repro_modules():
+    sys.path.insert(0, SRC)
+    try:
+        import repro
+
+        names = ["repro"]
+        for m in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+            names.append(m.name)
+        return sorted(names)
+    finally:
+        sys.path.remove(SRC)
+
+
+def test_every_repro_module_imports():
+    names = iter_repro_modules()
+    # the sweep must actually see the package layers it is protecting
+    for expected in ("repro.dist.sharding", "repro.launch.steps",
+                     "repro.launch.dryrun", "repro.serve.scheduler",
+                     "repro.train.trainer"):
+        assert expected in names, names
+    code = "import importlib\n" + "".join(
+        f"importlib.import_module({n!r})\n" for n in names
+    ) + f"print('OK', {len(names)})"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert f"OK {len(names)}" in out.stdout
