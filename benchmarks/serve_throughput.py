@@ -12,6 +12,13 @@ Reported metric: prefill-phase throughput = total prompt tokens / wall
 time until every admitted request has emitted its first token.  Engines
 are warmed up (one throwaway workload) so the sweep measures steady-state
 scheduling, not XLA compilation.
+
+``--packed`` runs the token-packed A/B instead: dense and packed engines
+on the same mixed trace per budget, asserting identical outputs and
+reporting mixed-step wall time — the packed program's compiled shape is
+the packed capacity, so mean step wall must *scale with granted tokens*
+(measurably lower at token_budget=4 than the dense mixed step, which
+always computes the full (B, chunk_size) shape).
 """
 import argparse
 import time
@@ -70,6 +77,85 @@ def bench(params, cfg, args, chunk, budget):
     }
 
 
+def mixed_trace(args, vocab, seed=1):
+    """Mixed prompt lengths -> steps that carry decode AND prefill work
+    (the shapes where packing differs from the dense program)."""
+    rng = np.random.default_rng(seed)
+    lens = [args.prompt_len if i % 2 else max(args.prompt_len // 4, 8)
+            for i in range(args.requests)]
+    return [
+        Request(uid=i, prompt=rng.integers(0, vocab, size=n).tolist(),
+                max_new_tokens=args.new_tokens)
+        for i, n in enumerate(lens)
+    ]
+
+
+def bench_packed_ab(params, cfg, args):
+    """Dense-vs-packed A/B on the same trace per budget."""
+    budgets = [b or None for b in args.budgets]
+    if 4 not in budgets:
+        budgets = [4] + budgets  # the acceptance point: budget=4
+
+    hdr = f"{'budget':>7} {'mode':>7} {'granted/step':>13} {'mixed-step ms':>14} " \
+          f"{'decode-step ms':>15} {'total s':>8} {'outputs':>8}"
+    print(hdr)
+    print("-" * len(hdr))
+    rows = {}
+    for budget in budgets:
+        for packed in (False, True):
+            eng = ContinuousBatcher(
+                params, cfg, batch_slots=args.batch,
+                max_len=args.prompt_len + args.new_tokens,
+                chunk_size=16, token_budget=budget, packed=packed,
+            )
+            run_once(eng, mixed_trace(args, cfg.vocab_size, seed=7))  # warmup
+            eng.reset_stats()
+            done, _, total = run_once(eng, mixed_trace(args, cfg.vocab_size))
+            mixed = [s for s in eng.step_stats if s.prefill_tokens > 0]
+            decode = [s for s in eng.step_stats if s.prefill_tokens == 0]
+            mixed_ms = 1e3 * float(np.mean([s.wall_time for s in mixed]))
+            decode_ms = 1e3 * float(np.mean([s.wall_time for s in decode])) if decode else float("nan")
+            granted = float(np.mean([s.scheduled_tokens for s in mixed]))
+            rows[(budget, packed)] = {
+                "mixed_ms": mixed_ms, "granted": granted,
+                "outputs": {u: r.output for u, r in done.items()},
+            }
+            if packed:
+                verdict = "same" if (
+                    rows[(budget, True)]["outputs"] == rows[(budget, False)]["outputs"]
+                ) else "DIFF"
+            else:
+                verdict = "oracle"
+            print(f"{str(budget or '-'):>7} {'packed' if packed else 'dense':>7} "
+                  f"{granted:>13.1f} {mixed_ms:>14.2f} {decode_ms:>15.2f} "
+                  f"{total:>8.2f} {verdict:>8}")
+
+    if any(
+        rows[(b, True)]["outputs"] != rows[(b, False)]["outputs"] for b in budgets
+    ):
+        raise SystemExit("FAIL: packed outputs diverged from the dense oracle")
+
+    # proportionality: packed mixed-step wall scales with granted tokens
+    caps = sorted(b for b in budgets if b)
+    if len(caps) >= 2:
+        lo, hi = rows[(caps[0], True)], rows[(caps[-1], True)]
+        print(f"packed proportionality: budget {caps[0]} -> "
+              f"{lo['granted']:.1f} granted tok/step, {lo['mixed_ms']:.2f} ms; "
+              f"budget {caps[-1]} -> {hi['granted']:.1f} tok/step, "
+              f"{hi['mixed_ms']:.2f} ms")
+
+    # the acceptance point: packed at budget=4 beats the dense mixed step
+    d4, p4 = rows[(4, False)]["mixed_ms"], rows[(4, True)]["mixed_ms"]
+    print(f"\nbudget=4 mixed step: dense {d4:.2f} ms vs packed {p4:.2f} ms "
+          f"({d4 / p4:.2f}x)")
+    if p4 >= d4:
+        raise SystemExit(
+            f"FAIL: packed mixed step ({p4:.2f} ms) not faster than dense "
+            f"({d4:.2f} ms) at token_budget=4"
+        )
+    print("PASS: outputs identical, packed step wall scales with granted tokens")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8)
@@ -77,9 +163,15 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=256)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--chunks", type=int, nargs="+", default=[4, 16, 32])
-    ap.add_argument("--budgets", type=int, nargs="+", default=[0, 64],
-                    help="0 = uncapped")
+    ap.add_argument("--budgets", type=int, nargs="+", default=None,
+                    help="0 = uncapped; defaults to '0 64' for the chunk "
+                         "sweep and '4 64' for --packed")
+    ap.add_argument("--packed", action="store_true",
+                    help="dense-vs-packed A/B: step wall must scale with "
+                         "granted tokens")
     args = ap.parse_args()
+    if args.budgets is None:
+        args.budgets = [4, 64] if args.packed else [0, 64]
 
     cfg = ModelConfig(name="serve-bench", n_layers=4, d_model=128, n_heads=4,
                       n_kv_heads=2, d_ff=256, vocab_size=1003, sliding_window=64,
@@ -88,6 +180,10 @@ def main():
     print(f"model {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
           f"{args.requests} requests x {args.prompt_len}-token prompts, "
           f"{args.batch} slots")
+
+    if args.packed:
+        bench_packed_ab(params, cfg, args)
+        return
 
     base = bench(params, cfg, args, chunk=1, budget=None)
     rows = [base]

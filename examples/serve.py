@@ -31,6 +31,9 @@ def main():
     ap.add_argument("--chunk-size", type=int, default=16)
     ap.add_argument("--token-budget", type=int, default=0,
                     help="per-step scheduled-token cap (0 = uncapped)")
+    ap.add_argument("--packed", action="store_true",
+                    help="token-packed step program: granted tokens alone "
+                         "determine per-step compute")
     ap.add_argument("--arch", default="",
                     help="optional smoke-config name (e.g. mixtral-8x22b)")
     args = ap.parse_args()
@@ -52,6 +55,7 @@ def main():
         params, cfg, batch_slots=args.batch, max_len=max_len,
         chunk_size=args.chunk_size,
         token_budget=args.token_budget or None,
+        packed=args.packed,
     )
 
     rng = np.random.default_rng(1)

@@ -27,8 +27,13 @@ NEG_INF = -1e30
 
 
 def _attn_kernel(
-    q_ref, k_ref, v_ref, o_ref, *, sq, sk, block_q, block_k, causal, window, sm_scale
+    q_ref, k_ref, v_ref, *rest,
+    sq, sk, block_q, block_k, causal, window, sm_scale, segmented=False,
 ):
+    if segmented:
+        q_seg_ref, kv_seg_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
     qi = pl.program_id(1)
     q = q_ref[...].astype(jnp.float32) * sm_scale  # (block_q, d)
 
@@ -36,6 +41,9 @@ def _attn_kernel(
     qpos = q_start + jax.lax.iota(jnp.int32, block_q) + (sk - sq)  # right-aligned
 
     # Admissible key-tile range for this query tile (loop-bound pruning).
+    # Segment masking composes with, but never widens, these bounds: a
+    # key tile skipped by causality can hold no same-segment admissible
+    # key either (segments are position-contiguous by construction).
     if causal:
         hi = jnp.minimum((q_start + block_q - 1 + (sk - sq)) // block_k + 1, sk // block_k)
     else:
@@ -44,6 +52,9 @@ def _attn_kernel(
         lo = jnp.maximum((q_start + (sk - sq) - window + 1) // block_k, 0)
     else:
         lo = 0
+
+    if segmented:
+        qseg = q_seg_ref[...]  # (block_q,)
 
     def body(ki, carry):
         acc, m_prev, l_prev = carry
@@ -57,6 +68,9 @@ def _attn_kernel(
             mask &= kpos[None, :] <= qpos[:, None]
         if window > 0:
             mask &= kpos[None, :] > qpos[:, None] - window
+        if segmented:
+            kseg = pl.load(kv_seg_ref, (pl.dslice(ki * block_k, block_k),))
+            mask &= qseg[:, None] == kseg[None, :]
         s = jnp.where(mask, s, NEG_INF)
 
         m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
@@ -83,13 +97,31 @@ def flash_attention(
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
     interpret: bool = False,
+    q_segment_ids: jnp.ndarray = None,  # (B, Sq) int32
+    kv_segment_ids: jnp.ndarray = None,  # (B, Sk) int32
 ) -> jnp.ndarray:
+    """Flash attention; optional segment masking for token-packed batches.
+
+    With segment ids, query i additionally requires
+    ``q_segment_ids[b, i] == kv_segment_ids[b, j]`` to attend key j — the
+    mask term that keeps requests flattened side by side into one packed
+    sequence from attending across their boundaries.  Segments must be
+    position-contiguous (the packed layout guarantees this) so the
+    causal/window loop-bound pruning stays valid; a query with no
+    admissible key returns the mean of its visited value tiles (callers
+    mask such padding rows out).
+    """
     b, h, sq, d = q.shape
     kvh, sk = k.shape[1], k.shape[2]
     g = h // kvh
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
     assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    segmented = q_segment_ids is not None
+    if segmented != (kv_segment_ids is not None):
+        # raised, not assert-ed: under python -O a half-passed pair would
+        # silently disable the mask — a cross-request KV leak
+        raise ValueError("pass both q_segment_ids and kv_segment_ids, or neither")
 
     # Flatten (B, KV, G) onto the leading grid axis; queries grouped by KV.
     qr = q.reshape(b * kvh * g, sq, d)
@@ -100,17 +132,27 @@ def flash_attention(
         _attn_kernel,
         sq=sq, sk=sk, block_q=block_q, block_k=block_k,
         causal=causal, window=window, sm_scale=1.0 / math.sqrt(d),
+        segmented=segmented,
     )
+    in_specs = [
+        pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+        pl.BlockSpec((None, sk, d), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((None, sk, d), lambda i, j: (i, 0, 0)),
+    ]
+    operands = [qr, kr, vr]
+    if segmented:
+        # Segment ids are per (batch, position): grid axis 0 runs over
+        # b*h flattened programs, so the index map recovers the batch.
+        in_specs.append(pl.BlockSpec((None, block_q), lambda i, j: (i // h, j)))
+        in_specs.append(pl.BlockSpec((None, sk), lambda i, j: (i // h, 0)))
+        operands.append(q_segment_ids.astype(jnp.int32))
+        operands.append(kv_segment_ids.astype(jnp.int32))
     out = pl.pallas_call(
         kernel,
         grid=(b * h, sq // block_q),
-        in_specs=[
-            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((None, sk, d), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((None, sk, d), lambda i, j: (i, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
         out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
         interpret=interpret,
-    )(qr, kr, vr)
+    )(*operands)
     return out.reshape(b, h, sq, d)

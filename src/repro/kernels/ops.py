@@ -21,10 +21,13 @@ def _default_interpret() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
-def flash_attention(q, k, v, causal=True, window=0, block_q=128, block_k=128, interpret=None):
+def flash_attention(q, k, v, causal=True, window=0, block_q=128, block_k=128,
+                    interpret=None, q_segment_ids=None, kv_segment_ids=None):
     if interpret is None:
         interpret = _default_interpret()
-    return _flash(q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k, interpret=interpret)
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_k=block_k, interpret=interpret,
+                  q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))

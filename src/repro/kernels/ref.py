@@ -13,8 +13,17 @@ def flash_attention_ref(
     v: jnp.ndarray,  # (B, KV, Sk, D)
     causal: bool = True,
     window: int = 0,
+    q_segment_ids: jnp.ndarray = None,  # (B, Sq) int32
+    kv_segment_ids: jnp.ndarray = None,  # (B, Sk) int32
 ) -> jnp.ndarray:
-    """Naive attention with GQA head grouping and optional sliding window."""
+    """Naive attention with GQA head grouping and optional sliding window.
+
+    Segment ids (token-packed batches): when given, query i may only
+    attend key j with ``q_segment_ids[b, i] == kv_segment_ids[b, j]`` —
+    requests flattened side by side into one sequence stay isolated.
+    A query whose segment matches no admissible key softmaxes over an
+    all-masked row (uniform weights); callers mask such rows out.
+    """
     b, h, sq, d = q.shape
     kvh, sk = k.shape[1], k.shape[2]
     g = h // kvh
@@ -27,7 +36,10 @@ def flash_attention_ref(
         mask = mask & (kpos <= qpos)
     if window > 0:
         mask = mask & (kpos > qpos - window)
-    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    mask = jnp.broadcast_to(mask[None], (b, sq, sk))
+    if q_segment_ids is not None:
+        mask = mask & (q_segment_ids[:, :, None] == kv_segment_ids[:, None, :])
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
     return out.reshape(b, h, sq, d).astype(q.dtype)

@@ -355,6 +355,7 @@ def apply_attention(
     cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
     decode_pos: Optional[jnp.ndarray] = None,
     seq_lens: Optional[jnp.ndarray] = None,
+    slot_ids: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """One attention block application.
 
@@ -371,6 +372,15 @@ def apply_attention(
     columns are padding (no cache write, output ignored).  Requires a
     linear cache (buffer length covers every absolute position, no ring
     wraparound); sliding windows are enforced through the mask instead.
+
+    slot_ids (token-packed serving step): (P,) cache-slot id per packed
+    token for an x of shape (1, P, d) — entry j is written to cache slot
+    ``slot_ids[j]`` at absolute position ``positions[0, j]`` and attends
+    only to that slot's rows at positions <= its own (its segment), so
+    tokens from different requests packed into one step can never see
+    each other.  ``slot_ids[j] < 0`` marks padding: no cache write, all
+    keys masked, output ignored.  Requires a linear cache, like the
+    chunked path.
     """
     cd = cfg.compute_dtype
     window = cfg.sliding_window if kind == "L" else 0
@@ -389,7 +399,48 @@ def apply_attention(
 
     q, k, v = _qkv(p, x, cfg, positions)
 
-    if cache is None:
+    if slot_ids is not None:
+        # Token-packed step: x is (1, P, d), one flattened batch of this
+        # iteration's granted tokens.  Scatter each token's K/V into its
+        # slot's cache rows, then each query gathers its own slot's
+        # buffer and attends causally within it — the segment mask falls
+        # out of the gather (cross-slot keys are simply never fetched).
+        # Compute is O(P * L), proportional to granted tokens P.
+        # Raised, not assert-ed: under python -O a ring buffer here would
+        # silently drop writes past the window instead of erroring.
+        if cache is None:
+            raise ValueError("packed step needs a decode cache")
+        buf_len = cache["k"].shape[1]
+        if window > 0 and buf_len <= window:
+            raise ValueError(
+                f"packed step needs a linear cache "
+                f"(init_decode_cache(..., linear=True)); got ring buffer of "
+                f"{buf_len} rows for sliding window {window}"
+            )
+        slots = jnp.asarray(slot_ids)  # (P,)
+        pos = jnp.asarray(positions).reshape(-1)  # (P,) absolute
+        valid = slots >= 0
+        slot_safe = jnp.where(valid, slots, 0)
+        wp = jnp.where(valid, pos, buf_len)  # OOB => dropped by scatter
+        ck = cache["k"].at[slot_safe, wp].set(
+            k[0].astype(cache["k"].dtype), mode="drop"
+        )
+        cv = cache["v"].at[slot_safe, wp].set(
+            v[0].astype(cache["v"].dtype), mode="drop"
+        )
+        kk = jnp.take(ck, slot_safe, axis=0)  # (P, L, KV, D)
+        vv = jnp.take(cv, slot_safe, axis=0)
+        kpos_idx = jnp.arange(buf_len)
+        m = (kpos_idx[None, :] <= pos[:, None]) & valid[:, None]
+        if window > 0:
+            m &= kpos_idx[None, :] > pos[:, None] - window
+        out = sdpa(
+            q[0][:, None], kk.astype(cd), vv.astype(cd),
+            m[:, None, None, :], cfg.logit_softcap,
+        )  # (P, 1, H, D)
+        out = out[:, 0][None]  # back to (1, P, H, D)
+        cache = {"k": ck, "v": cv}
+    elif cache is None:
         sq = x.shape[1]
         q, k, v, real_h = _pad_heads_for_tp(q, k, v)
         if kind == "L" and sq > 2 * window and sq % min(window, sq) == 0:

@@ -226,6 +226,28 @@ def per_token_losses(params, cfg, batch, moe_impl: str = "sort"):
 # ---------------------------------------------------------------------------
 
 
+class UnsupportedPatternError(NotImplementedError):
+    """A serving path was asked for a layer pattern it cannot run.
+
+    Typed (and raised unconditionally, not ``assert``-ed — asserts vanish
+    under ``python -O``) so callers can catch it and fall back to
+    ``decode_step`` token streaming for recurrent/SSM models.
+    """
+
+
+def require_chunkable(cfg: ModelConfig, what: str = "chunked prefill") -> None:
+    """Raise ``UnsupportedPatternError`` unless ``cfg`` supports multi-token
+    cache writes (attention-only patterns, decoder-only)."""
+    if not set(cfg.pattern) <= {"G", "L"}:
+        raise UnsupportedPatternError(
+            f"{what} supports attention-only patterns ('G'/'L'), got "
+            f"{cfg.pattern!r}; recurrent/SSM layers ('R'/'M') advance "
+            f"their state token-by-token — use decode_step"
+        )
+    if cfg.is_encdec:
+        raise UnsupportedPatternError(f"{what} does not support enc-dec models")
+
+
 def init_decode_cache(
     params: PyTree,
     cfg: ModelConfig,
@@ -290,10 +312,7 @@ def prefill_chunk(
     jax<=0.4 CPU can read freed host memory mid-execution otherwise.
     ``ContinuousBatcher`` does this for you.
     """
-    assert set(cfg.pattern) <= {"G", "L"}, (
-        f"chunked prefill supports attention-only patterns, got {cfg.pattern!r}"
-    )
-    assert not cfg.is_encdec, "chunked prefill does not support enc-dec models"
+    require_chunkable(cfg, "chunked prefill")
     pos = jnp.asarray(pos)
     c = tokens.shape[1]
     positions = pos[:, None] + jnp.arange(c)[None, :]  # (B, C) for RoPE
@@ -305,6 +324,42 @@ def prefill_chunk(
     x = L.apply_norm(params["final_norm"], x, cfg)
     logits = L.unembed(params["embed"], x, cfg)
     return logits, {"stack": new_stack}
+
+
+def packed_prefill(
+    params: PyTree,
+    cfg: ModelConfig,
+    cache: PyTree,
+    tokens: jnp.ndarray,  # (P,) int32 packed granted tokens
+    slot_ids: jnp.ndarray,  # (P,) int32 cache slot per token (< 0 = padding)
+    positions: jnp.ndarray,  # (P,) int32 absolute cache position per token
+    moe_impl: str = "dense",
+) -> Tuple[jnp.ndarray, PyTree]:
+    """Token-packed engine step: granted tokens alone determine compute.
+
+    The dense ``prefill_chunk`` computes the full (B, C) shape however few
+    tokens the scheduler granted; this path takes the flattened layout
+    from ``repro.serve.packing`` — one row per granted token, P fixed at
+    the engine's packed capacity — and runs the whole mixed decode+prefill
+    iteration as a single (1, P) batch.  Each token writes its K/V into
+    ``cache`` at (slot_ids[j], positions[j]) and attends only within its
+    own slot (segment-aware masking via the per-token slot gather; see
+    ``apply_attention``), so requests packed side by side can never leak
+    into each other.  Returns logits (P, V); the caller reads each slot's
+    final granted row.  Same cache contract as ``prefill_chunk``:
+    ``init_decode_cache(..., linear=True)``, attention-only patterns.
+    """
+    require_chunkable(cfg, "packed prefill")
+    tokens = jnp.asarray(tokens)[None]  # (1, P)
+    pos2 = jnp.asarray(positions)[None]  # (1, P)
+    x = L.embed(params["embed"], tokens, cfg, pos2)
+    x, new_stack, _ = apply_stack(
+        params["stack"], x, cfg, pos2, cache["stack"],
+        slot_ids=jnp.asarray(slot_ids), moe_impl=moe_impl,
+    )
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits[0], {"stack": new_stack}
 
 
 def decode_step(

@@ -103,6 +103,7 @@ def apply_block(
     enc_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
     moe_impl: str = "sort",
     seq_lens=None,
+    slot_ids=None,
 ) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -112,7 +113,7 @@ def apply_block(
         attn_cache = None if cache is None else cache.get("attn")
         y, attn_cache = L.apply_attention(
             p["attn"], h, cfg, kind, positions, attn_cache, decode_pos=decode_pos,
-            seq_lens=seq_lens,
+            seq_lens=seq_lens, slot_ids=slot_ids,
         )
         x = x + y
         if enc_kv is not None and "cross_attn" in p:
@@ -213,6 +214,7 @@ def apply_stack(
     enc_kv_fn=None,
     moe_impl: str = "sort",
     seq_lens=None,
+    slot_ids=None,
 ) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
     """Apply all layers. enc_kv_fn(block_params, ) is handled by encdec path
     in model.py via per-block cross KV computed there (cross_kv passed as a
@@ -232,6 +234,7 @@ def apply_stack(
             x, nc, a = apply_block(
                 group_params[j], x, cfg, kind, positions, cache_j,
                 decode_pos=decode_pos, moe_impl=moe_impl, seq_lens=seq_lens,
+                slot_ids=slot_ids,
             )
             new_caches.append(nc)
             aux = aux + a
@@ -273,7 +276,7 @@ def apply_stack(
         else:
             x, nc, a = apply_block(
                 p, x, cfg, kind, positions, cache_i, decode_pos=decode_pos,
-                moe_impl=moe_impl, seq_lens=seq_lens,
+                moe_impl=moe_impl, seq_lens=seq_lens, slot_ids=slot_ids,
             )
         new_tail.append(nc)
         aux_total = aux_total + a

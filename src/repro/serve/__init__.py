@@ -1,3 +1,14 @@
+from ..models.model import UnsupportedPatternError
+from .packing import PackedLayout, pack_step, packed_capacity
 from .scheduler import AdmissionError, ContinuousBatcher, Request, StepStats
 
-__all__ = ["AdmissionError", "ContinuousBatcher", "Request", "StepStats"]
+__all__ = [
+    "AdmissionError",
+    "ContinuousBatcher",
+    "PackedLayout",
+    "Request",
+    "StepStats",
+    "UnsupportedPatternError",
+    "pack_step",
+    "packed_capacity",
+]

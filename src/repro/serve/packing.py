@@ -1,0 +1,112 @@
+"""Token-packed step layout: flatten granted (slot, position) tokens.
+
+The dense engine step computes a full ``(B, chunk_size)`` shape no matter
+how many tokens the budget actually granted, so its wall time is bounded
+but not *proportional* to the budget.  This module is the layout pass of
+the token-packed step program (vLLM-style flattened batch): every token
+granted this iteration — one per decode slot, up to a chunk per prefill
+slot — is packed into a fixed-capacity ``(capacity,)`` vector together
+with its cache-slot id and absolute position.  Granted tokens alone then
+determine the compute of the packed model path
+(``repro.models.model.packed_prefill``), which is what turns the per-step
+token budget (the serving ``tau``) into a genuine per-step compute bound.
+
+Invariants (property-tested in ``tests/test_property.py``):
+
+* at most ``capacity`` entries; ``pack_step`` raises ``ValueError`` on
+  overflow rather than silently truncating;
+* scatter destinations ``(slot, position)`` are unique — the packed KV
+  write is race-free;
+* positions are contiguous per slot, starting at the slot's write
+  cursor;
+* every granted token appears exactly once, in grant order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+#: slot id marking padding entries; scatter drops them (out-of-range write
+#: position) and the packed attention masks them out.
+PAD_SLOT = -1
+
+#: Grant = (slot index, first absolute position, tokens to consume).
+Grant = Tuple[int, int, Sequence[int]]
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLayout:
+    """One engine iteration's granted tokens, flattened.
+
+    Arrays all have length ``capacity``; entries past ``n_tokens`` are
+    padding (``slot_ids == PAD_SLOT``, ``positions == 0``, ``tokens == 0``).
+    """
+
+    tokens: np.ndarray  # (capacity,) int32
+    slot_ids: np.ndarray  # (capacity,) int32; PAD_SLOT on padding
+    positions: np.ndarray  # (capacity,) int32 absolute cache positions
+    #: (n_segments + 1,) packed offset of each grant's first token —
+    #: diagnostic/telemetry only; the model path derives segment
+    #: isolation from slot_ids alone (per-token slot gather)
+    segment_starts: np.ndarray
+    last_index: Dict[int, int]  # slot -> packed index of its final token
+    n_tokens: int
+    capacity: int
+
+
+def packed_capacity(batch_slots: int, chunk_size: int, token_budget) -> int:
+    """Compiled packed-program length for an engine configuration.
+
+    The scheduler can exceed ``token_budget`` in exactly two ways: decode
+    slots are unconditional (up to ``batch_slots`` tokens even when the
+    budget is smaller) and the starvation guard grants one extra prefill
+    token when decodes alone exhaust the budget — hence
+    ``max(batch_slots, token_budget) + 1``.  With no budget every
+    prefilling slot may take a full chunk: ``batch_slots * chunk_size``.
+    """
+    if token_budget is None:
+        return batch_slots * chunk_size
+    return max(batch_slots, token_budget) + 1
+
+
+def pack_step(grants: Sequence[Grant], capacity: int) -> PackedLayout:
+    """Flatten this iteration's grants into a fixed-capacity layout.
+
+    ``grants`` is the scheduler's output: for each active slot, the slot
+    index, the slot's current write cursor (first absolute position), and
+    the tokens it consumes this step (one for decode, up to a chunk for
+    prefill).  Zero-token grants are allowed and occupy no entries.
+    """
+    total = sum(len(toks) for _, _, toks in grants)
+    if total > capacity:
+        raise ValueError(
+            f"packed layout overflow: {total} granted tokens > capacity "
+            f"{capacity}; the scheduler and packed_capacity() disagree"
+        )
+    tokens = np.zeros((capacity,), np.int32)
+    slot_ids = np.full((capacity,), PAD_SLOT, np.int32)
+    positions = np.zeros((capacity,), np.int32)
+    starts: List[int] = [0]
+    last_index: Dict[int, int] = {}
+    cursor = 0
+    for slot, pos0, toks in grants:
+        m = len(toks)
+        if m == 0:
+            continue
+        tokens[cursor : cursor + m] = toks
+        slot_ids[cursor : cursor + m] = slot
+        positions[cursor : cursor + m] = np.arange(pos0, pos0 + m)
+        cursor += m
+        starts.append(cursor)
+        last_index[slot] = cursor - 1
+    return PackedLayout(
+        tokens=tokens,
+        slot_ids=slot_ids,
+        positions=positions,
+        segment_starts=np.asarray(starts, np.int32),
+        last_index=last_index,
+        n_tokens=total,
+        capacity=capacity,
+    )

@@ -22,20 +22,25 @@ prompt.  Two guarantees mirror the paper's semantics:
 * at least one prefill token is scheduled whenever prefill work is
   waiting (the analogue of ``min_microbatches=1`` — no starvation).
 
-Shape stability: the engine compiles at most two programs per session —
-a (B, chunk_size) mixed step and a (B, 1) decode-only step — because the
-budget only changes the *contents* of the per-slot length vector, never
-tensor shapes.
+Shape stability: the dense mode compiles at most two programs per
+session — a (B, chunk_size) mixed step and a (B, 1) decode-only step —
+because the budget only changes the *contents* of the per-slot length
+vector, never tensor shapes.  The packed mode compiles exactly one, at
+the packed capacity (``packing.packed_capacity``).
 
 A consequence worth being precise about: per-step wall time is bounded
 by the fixed cost of those two compiled programs, and the budget bounds
 *scheduled tokens* (admission of new prefill work per iteration), which
 is what spreads a long prompt across iterations so decode slots emit on
-every one of them.  In this dense reference implementation a mixed step
-computes the full (B, chunk_size) shape regardless of how many tokens
-were granted; a token-packed step program (vLLM-style flattened batch),
-where granted tokens alone determine the compute, is the ROADMAP next
-step that turns the same accounting into proportional wall time.
+every one of them.  In the dense mode a mixed step computes the full
+(B, chunk_size) shape regardless of how many tokens were granted;
+``packed=True`` switches to the token-packed step program (vLLM-style
+flattened batch, ``serve.packing`` + ``models.model.packed_prefill``)
+whose compiled shape is the packed capacity — granted tokens alone
+determine the compute, so the budget bounds actual per-step compute, not
+just scheduled-token accounting.  Scheduling, deferral, and accounting
+are shared between the two modes; the dense mode is the oracle the
+packed parity suite (``tests/test_serve_packed.py``) compares against.
 """
 from __future__ import annotations
 
@@ -49,7 +54,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import ModelConfig
-from ..models.model import init_decode_cache, prefill_chunk
+from ..models.model import (
+    init_decode_cache,
+    packed_prefill,
+    prefill_chunk,
+    require_chunkable,
+)
+from . import packing
 
 PyTree = object
 
@@ -59,6 +70,12 @@ def _engine_step(params, cfg: ModelConfig, cache, tokens, pos, lens):
     """Module-level jitted step: compilations are shared across engines
     with the same (cfg, shapes) — engine construction stays cheap."""
     return prefill_chunk(params, cfg, cache, tokens, pos, lens, moe_impl="dense")
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _packed_engine_step(params, cfg: ModelConfig, cache, tokens, slot_ids, pos):
+    """Token-packed step: one (capacity,) program per engine config."""
+    return packed_prefill(params, cfg, cache, tokens, slot_ids, pos, moe_impl="dense")
 
 
 class AdmissionError(RuntimeError):
@@ -140,6 +157,11 @@ class ContinuousBatcher:
         chunk for every prefilling slot).
       max_queue: admission control — ``submit`` raises ``AdmissionError``
         once this many requests are waiting for a slot.  None = unbounded.
+      packed: run the token-packed step program instead of the dense
+        (B, chunk_size) one.  The compiled shape is the packed capacity
+        (``packing.packed_capacity``), so granted tokens alone determine
+        per-step compute and the budget becomes a real compute bound.
+        Scheduling and outputs are identical to the dense mode.
       dist: optional ``repro.dist.Distribution`` — shards the decode cache
         (slots over the data axes, KV heads over "model") and the params
         by the path-based rules; the jitted engine step then partitions
@@ -155,14 +177,23 @@ class ContinuousBatcher:
         chunk_size: int = 16,
         token_budget: Optional[int] = None,
         max_queue: Optional[int] = None,
+        packed: bool = False,
         dist=None,
     ):
         assert chunk_size >= 1
         assert token_budget is None or token_budget >= 1
         # fail at construction, not on the first step mid-trace
-        assert set(cfg.pattern) <= {"G", "L"}, (
-            f"ContinuousBatcher needs an attention-only pattern (got "
-            f"{cfg.pattern!r}); recurrent/SSM models decode via decode_step"
+        require_chunkable(cfg, "ContinuousBatcher")
+        if packed and dist is not None:
+            raise NotImplementedError(
+                "packed=True with a Distribution is not supported yet: the "
+                "per-token slot gather would cross the sharded slot axis "
+                "every step (the ROADMAP multi-host serving-mesh item)"
+            )
+        self.packed = packed
+        self.packed_capacity = (
+            packing.packed_capacity(batch_slots, chunk_size, token_budget)
+            if packed else None
         )
         self.dist = dist
         if dist is not None:
@@ -245,36 +276,20 @@ class ContinuousBatcher:
             spent += grant
         return n
 
-    def step(self):
-        """One engine iteration: mixed chunked-prefill + decode."""
-        t0 = time.perf_counter()
-        self._admit()
-        n = self._schedule()
+    def _run_dense(self, grants) -> Dict[int, int]:
+        """Dense (B, C) step.  Returns {slot: argmax token at its last
+        granted column}."""
         b = len(self.slots)
         c = self.chunk_size if any(
-            n[i] > 0 and self.slots[i].prefilling for i in range(b)
+            self.slots[i].prefilling for i, _, _ in grants
         ) else 1
         tokens = np.zeros((b, c), np.int32)
         pos = np.zeros((b,), np.int32)
-        lens = np.asarray(n, np.int32)
-        decode_toks = prefill_toks = deferred = 0
-        for i, s in enumerate(self.slots):
-            if s.free or n[i] == 0:
-                if not s.free and s.prefilling:
-                    deferred += min(self.chunk_size, len(s.req.prompt) - s.pos)
-                continue
-            r = s.req
-            pos[i] = s.pos
-            if s.prefilling:
-                tokens[i, : n[i]] = r.prompt[s.pos : s.pos + n[i]]
-                prefill_toks += n[i]
-                deferred += max(
-                    min(self.chunk_size, len(r.prompt) - s.pos) - n[i], 0
-                )
-            else:
-                tokens[i, 0] = r.output[-1] if r.output else r.prompt[-1]
-                decode_toks += 1
-
+        lens = np.zeros((b,), np.int32)
+        for i, pos0, toks in grants:
+            tokens[i, : len(toks)] = toks
+            pos[i] = pos0
+            lens[i] = len(toks)
         logits, self.cache = _engine_step(
             self.params, self.cfg, self.cache, jnp.asarray(tokens),
             jnp.asarray(pos), jnp.asarray(lens),
@@ -284,6 +299,43 @@ class ContinuousBatcher:
         # token/pos buffers while the step is still in flight corrupts the
         # computation on jax<=0.4 CPU (observed use-after-free garbage).
         next_tok = np.asarray(jnp.argmax(logits, axis=-1))  # (B, C)
+        return {i: int(next_tok[i, len(toks) - 1]) for i, _, toks in grants}
+
+    def _run_packed(self, grants) -> Dict[int, int]:
+        """Token-packed (capacity,) step: compute scales with grants."""
+        layout = packing.pack_step(grants, self.packed_capacity)
+        logits, self.cache = _packed_engine_step(
+            self.params, self.cfg, self.cache, jnp.asarray(layout.tokens),
+            jnp.asarray(layout.slot_ids), jnp.asarray(layout.positions),
+        )
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1))  # (P,) — syncs
+        return {i: int(next_tok[j]) for i, j in layout.last_index.items()}
+
+    def step(self):
+        """One engine iteration: mixed chunked-prefill + decode."""
+        t0 = time.perf_counter()
+        self._admit()
+        n = self._schedule()
+        decode_toks = prefill_toks = deferred = 0
+        grants: List[packing.Grant] = []  # (slot, start pos, tokens)
+        for i, s in enumerate(self.slots):
+            if s.free or n[i] == 0:
+                if not s.free and s.prefilling:
+                    deferred += min(self.chunk_size, len(s.req.prompt) - s.pos)
+                continue
+            r = s.req
+            if s.prefilling:
+                toks = r.prompt[s.pos : s.pos + n[i]]
+                prefill_toks += n[i]
+                deferred += max(
+                    min(self.chunk_size, len(r.prompt) - s.pos) - n[i], 0
+                )
+            else:
+                toks = [r.output[-1] if r.output else r.prompt[-1]]
+                decode_toks += 1
+            grants.append((i, s.pos, toks))
+
+        last_tok = self._run_packed(grants) if self.packed else self._run_dense(grants)
 
         now = time.perf_counter()
         for i, s in enumerate(self.slots):
@@ -294,7 +346,7 @@ class ContinuousBatcher:
             s.pos += n[i]
             if was_prefilling and s.pos < len(r.prompt):
                 continue  # still mid-prompt; no token emitted this step
-            r.output.append(int(next_tok[i, n[i] - 1]))
+            r.output.append(last_tok[i])
             if len(r.output) == 1:
                 r.first_token_at = now
                 r.first_token_step = self.steps

@@ -59,6 +59,84 @@ class TestFlashAttention:
         np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
 
 
+class TestFlashAttentionSegments:
+    """Segment-id masking — the packed-serving mask term (one flattened
+    sequence holding several requests; queries must stay inside their own
+    request's rows)."""
+
+    @staticmethod
+    def contiguous_segments(b, s, boundaries, seed=0):
+        """(B, S) int32 segment ids, contiguous runs split at `boundaries`."""
+        seg = np.zeros((b, s), np.int32)
+        for bnd in boundaries:
+            seg[:, bnd:] += 1
+        return jnp.asarray(seg)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_segment_mask_matches_ref(self, dtype):
+        b, h, kv, s, d = 2, 4, 2, 256, 64
+        q = rand((b, h, s, d), dtype, 0)
+        k = rand((b, kv, s, d), dtype, 1)
+        v = rand((b, kv, s, d), dtype, 2)
+        seg = self.contiguous_segments(b, s, [96, 160])
+        out = ops.flash_attention(
+            q, k, v, causal=True, interpret=True,
+            q_segment_ids=seg, kv_segment_ids=seg,
+        )
+        expect = ref.flash_attention_ref(
+            q, k, v, causal=True, q_segment_ids=seg, kv_segment_ids=seg
+        )
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=tol
+        )
+
+    def test_segment_mask_with_window(self):
+        q = rand((1, 4, 256, 64), jnp.float32, 3)
+        k = rand((1, 2, 256, 64), jnp.float32, 4)
+        v = rand((1, 2, 256, 64), jnp.float32, 5)
+        seg = self.contiguous_segments(1, 256, [128])
+        out = ops.flash_attention(
+            q, k, v, causal=True, window=64, interpret=True,
+            q_segment_ids=seg, kv_segment_ids=seg,
+        )
+        expect = ref.flash_attention_ref(
+            q, k, v, causal=True, window=64, q_segment_ids=seg, kv_segment_ids=seg
+        )
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+    def test_no_cross_segment_leak(self):
+        """Adversarial: two packed slots whose *absolute* positions overlap.
+
+        Both segments are causally visible to the second one's queries
+        (they sit earlier in the flattened sequence), and segment 0's
+        values are poisoned with a huge offset — any leak through the
+        mask shows up at full magnitude.  Segment 1's rows must equal an
+        attention computed over segment 1 alone.
+        """
+        s, half = 256, 128
+        q = rand((1, 2, s, 64), jnp.float32, 6)
+        k = rand((1, 2, s, 64), jnp.float32, 7)
+        v = rand((1, 2, s, 64), jnp.float32, 8)
+        v = v.at[:, :, :half].add(1e4)  # poison segment 0's values
+        seg = self.contiguous_segments(1, s, [half])
+        out = ops.flash_attention(
+            q, k, v, causal=True, interpret=True,
+            q_segment_ids=seg, kv_segment_ids=seg,
+        )
+        alone = ops.flash_attention(
+            q[:, :, half:], k[:, :, half:], v[:, :, half:],
+            causal=True, interpret=True,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out[:, :, half:]), np.asarray(alone), atol=2e-5
+        )
+        assert np.asarray(out[:, :, half:]).max() < 1e3, "segment-0 poison leaked"
+        # and the unsegmented kernel DOES see the poison (mask is load-bearing)
+        leaky = ops.flash_attention(q, k, v, causal=True, interpret=True)
+        assert np.asarray(leaky[:, :, half:]).max() > 1e3
+
+
 class TestRmsnorm:
     @pytest.mark.parametrize("shape", [(4, 128), (3, 17, 256), (1, 1, 1024), (513, 128)])
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

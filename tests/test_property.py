@@ -112,3 +112,63 @@ def test_effective_speedup_positive_finite(mu, sigma, m, n, tc):
     for tau in (0.6 * m * mu, m * mu, 2 * m * mu):
         s = effective_speedup(tau, mu, sigma, m, n, tc)
         assert np.isfinite(s) and s > 0
+
+
+# ---------------------------------------------------------------------------
+# Token-packed serving layout (repro.serve.packing)
+# ---------------------------------------------------------------------------
+
+# random slot/grant states: per active slot a write cursor and a grant of
+# 0..8 tokens; slot indices unique by construction (dict keys)
+grant_states = st.dictionaries(
+    keys=st.integers(min_value=0, max_value=15),  # slot index
+    values=st.tuples(
+        st.integers(min_value=0, max_value=40),  # write cursor (first pos)
+        st.lists(st.integers(min_value=0, max_value=999), max_size=8),
+    ),
+    max_size=8,
+)
+
+
+@settings(max_examples=100, deadline=None)
+@given(grant_states, st.integers(min_value=0, max_value=16))
+def test_packed_layout_invariants(state, slack):
+    """Packing never overflows, scatters race-free, keeps positions
+    contiguous per slot, and drops or duplicates no granted token."""
+    from repro.serve.packing import PAD_SLOT, pack_step
+
+    grants = [(slot, pos0, toks) for slot, (pos0, toks) in sorted(state.items())]
+    total = sum(len(t) for _, _, t in grants)
+    capacity = total + slack
+
+    if capacity == 0:
+        capacity = 1  # a (0,) compiled shape is never built
+    lay = pack_step(grants, capacity)
+
+    # entries never exceed the budgeted capacity; arrays are the capacity
+    assert lay.n_tokens == total <= lay.capacity == capacity
+    assert lay.tokens.shape == lay.slot_ids.shape == lay.positions.shape == (capacity,)
+    # padding is exactly the tail and marked with PAD_SLOT
+    assert (lay.slot_ids[total:] == PAD_SLOT).all()
+    assert (lay.slot_ids[:total] >= 0).all()
+
+    # scatter destinations (slot, position) are unique — race-free writes
+    dests = list(zip(lay.slot_ids[:total].tolist(), lay.positions[:total].tolist()))
+    assert len(set(dests)) == len(dests)
+
+    # positions contiguous per slot from its cursor; tokens appear exactly
+    # once, in grant order
+    for slot, pos0, toks in grants:
+        idx = np.flatnonzero(lay.slot_ids == slot)
+        assert len(idx) == len(toks)
+        np.testing.assert_array_equal(lay.positions[idx], pos0 + np.arange(len(toks)))
+        np.testing.assert_array_equal(lay.tokens[idx], toks)
+        if toks:
+            assert lay.last_index[slot] == idx[-1]
+
+    # overflow is loud, not truncating
+    if total > 0:
+        import pytest as _pytest
+
+        with _pytest.raises(ValueError):
+            pack_step(grants, total - 1)

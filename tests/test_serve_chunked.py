@@ -109,10 +109,12 @@ class TestPrefillChunkModel:
             assert int(last[i].argmax()) == int(r.argmax())
 
     def test_recurrent_patterns_rejected(self, params):
+        # typed error (not a bare assert — those vanish under python -O);
+        # the R/M/enc-dec matrix lives in test_serve_packed.py
         bad = ModelConfig(name="r", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
                           d_ff=64, vocab_size=101, layer_pattern="RG",
                           dtype="float32", remat=False)
-        with pytest.raises(AssertionError, match="attention-only"):
+        with pytest.raises(NotImplementedError, match="attention-only"):
             prefill_chunk({}, bad, {}, jnp.zeros((1, 4), jnp.int32),
                           jnp.zeros((1,), jnp.int32), jnp.ones((1,), jnp.int32))
 
