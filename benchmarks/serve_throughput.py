@@ -13,14 +13,22 @@ time until every admitted request has emitted its first token.  Engines
 are warmed up (one throwaway workload) so the sweep measures steady-state
 scheduling, not XLA compilation.
 
-``--packed`` runs the token-packed A/B instead: dense and packed engines
-on the same mixed trace per budget, asserting identical outputs and
-reporting mixed-step wall time — the packed program's compiled shape is
-the packed capacity, so mean step wall must *scale with granted tokens*
-(measurably lower at token_budget=4 than the dense mixed step, which
-always computes the full (B, chunk_size) shape).
+``--packed`` runs the mode A/B instead: dense, token-packed, and
+paged-KV engines on the same mixed trace per budget, asserting identical
+outputs and reporting mixed-step wall time — the packed program's
+compiled shape is the packed capacity, so mean step wall must *scale
+with granted tokens* (measurably lower at token_budget=4 than the dense
+mixed step, which always computes the full (B, chunk_size) shape).  The
+paged rows add cache-byte and page-usage accounting, plus a
+prefix-sharing record (second request with a shared 256-token prefix:
+fewer prefill steps, fewer pool pages).
+
+``--json PATH`` additionally writes every row as a machine-readable perf
+record (the CI full lane emits ``BENCH_serve.json``), so the repo keeps a
+benchmark trajectory across PRs.
 """
 import argparse
+import json
 import time
 
 import jax
@@ -29,6 +37,27 @@ import numpy as np
 from repro.models import ModelConfig
 from repro.models.model import init_params
 from repro.serve import ContinuousBatcher, Request
+
+#: engine kwargs per A/B mode; paged rides the packed step program (the
+#: two compose) so its delta against "packed" isolates the page tables
+MODES = {
+    "dense": {},
+    "packed": {"packed": True},
+    "paged": {"packed": True, "cache": "paged", "page_size": 16},
+}
+
+
+def cache_stats(eng):
+    """Allocated cache bytes + page accounting for one engine."""
+    if eng.kv is not None:
+        return {
+            "cache_bytes": eng.kv.memory_bytes(),
+            "num_pages": eng.kv.num_pages,
+            "peak_used_pages": int(eng.stats_summary()["peak_used_pages"]),
+            "touched_pages": eng.kv.tables.touched_pages,
+        }
+    leaves = jax.tree_util.tree_leaves(eng.cache)
+    return {"cache_bytes": int(sum(x.nbytes for x in leaves))}
 
 
 def make_requests(n, prompt_len, new_tokens, vocab, seed=1):
@@ -90,62 +119,83 @@ def mixed_trace(args, vocab, seed=1):
     ]
 
 
-def bench_packed_ab(params, cfg, args):
-    """Dense-vs-packed A/B on the same trace per budget."""
+def bench_modes_ab(params, cfg, args):
+    """Dense vs packed vs paged A/B on the same trace per budget.
+    Returns the machine-readable rows for ``--json``."""
     budgets = [b or None for b in args.budgets]
     if 4 not in budgets:
         budgets = [4] + budgets  # the acceptance point: budget=4
 
     hdr = f"{'budget':>7} {'mode':>7} {'granted/step':>13} {'mixed-step ms':>14} " \
-          f"{'decode-step ms':>15} {'total s':>8} {'outputs':>8}"
+          f"{'decode-step ms':>15} {'TTFT ms':>8} {'tok/s':>8} {'cache MiB':>10} {'outputs':>8}"
     print(hdr)
     print("-" * len(hdr))
-    rows = {}
+    rows, records = {}, []
     for budget in budgets:
-        for packed in (False, True):
-            eng = ContinuousBatcher(
-                params, cfg, batch_slots=args.batch,
-                max_len=args.prompt_len + args.new_tokens,
-                chunk_size=16, token_budget=budget, packed=packed,
-            )
-            run_once(eng, mixed_trace(args, cfg.vocab_size, seed=7))  # warmup
-            eng.reset_stats()
+        for mode, mode_kw in MODES.items():
+            def build():
+                return ContinuousBatcher(
+                    params, cfg, batch_slots=args.batch,
+                    max_len=args.prompt_len + args.new_tokens,
+                    chunk_size=16, token_budget=budget, **mode_kw,
+                )
+
+            run_once(build(), mixed_trace(args, cfg.vocab_size, seed=7))  # warmup
+            # measure on a FRESH engine: the jitted step programs are
+            # cached at module level so compilation stays warm, while the
+            # page pool / prefix cache start clean (otherwise the warmup's
+            # registered pages pollute the touched_pages record)
+            eng = build()
             done, _, total = run_once(eng, mixed_trace(args, cfg.vocab_size))
             mixed = [s for s in eng.step_stats if s.prefill_tokens > 0]
             decode = [s for s in eng.step_stats if s.prefill_tokens == 0]
             mixed_ms = 1e3 * float(np.mean([s.wall_time for s in mixed]))
             decode_ms = 1e3 * float(np.mean([s.wall_time for s in decode])) if decode else float("nan")
             granted = float(np.mean([s.scheduled_tokens for s in mixed]))
-            rows[(budget, packed)] = {
-                "mixed_ms": mixed_ms, "granted": granted,
+            summ = eng.stats_summary()
+            n_tok = sum(len(r.prompt) + len(r.output) for r in done.values())
+            cstats = cache_stats(eng)
+            rows[(budget, mode)] = {
+                "mixed_ms": mixed_ms,
                 "outputs": {u: r.output for u, r in done.items()},
             }
-            if packed:
-                verdict = "same" if (
-                    rows[(budget, True)]["outputs"] == rows[(budget, False)]["outputs"]
-                ) else "DIFF"
-            else:
+            records.append({
+                "mode": mode, "budget": budget, "granted_per_step": granted,
+                "mixed_step_ms": mixed_ms, "decode_step_ms": decode_ms,
+                "mean_ttft_ms": summ["mean_ttft"] * 1e3,
+                "p99_ttft_ms": summ["p99_ttft"] * 1e3,
+                "tokens_per_s": n_tok / total, "total_s": total,
+                "steps": eng.steps, **cstats,
+            })
+            if mode == "dense":
                 verdict = "oracle"
-            print(f"{str(budget or '-'):>7} {'packed' if packed else 'dense':>7} "
+            else:
+                verdict = "same" if (
+                    rows[(budget, mode)]["outputs"] == rows[(budget, "dense")]["outputs"]
+                ) else "DIFF"
+            print(f"{str(budget or '-'):>7} {mode:>7} "
                   f"{granted:>13.1f} {mixed_ms:>14.2f} {decode_ms:>15.2f} "
-                  f"{total:>8.2f} {verdict:>8}")
+                  f"{summ['mean_ttft'] * 1e3:>8.1f} {n_tok / total:>8.0f} "
+                  f"{cstats['cache_bytes'] / 2**20:>10.2f} {verdict:>8}")
 
-    if any(
-        rows[(b, True)]["outputs"] != rows[(b, False)]["outputs"] for b in budgets
-    ):
-        raise SystemExit("FAIL: packed outputs diverged from the dense oracle")
+    for b in budgets:
+        for mode in ("packed", "paged"):
+            if rows[(b, mode)]["outputs"] != rows[(b, "dense")]["outputs"]:
+                raise SystemExit(
+                    f"FAIL: {mode} outputs diverged from the dense oracle "
+                    f"at budget={b}"
+                )
 
     # proportionality: packed mixed-step wall scales with granted tokens
     caps = sorted(b for b in budgets if b)
     if len(caps) >= 2:
-        lo, hi = rows[(caps[0], True)], rows[(caps[-1], True)]
+        lo, hi = rows[(caps[0], "packed")], rows[(caps[-1], "packed")]
         print(f"packed proportionality: budget {caps[0]} -> "
-              f"{lo['granted']:.1f} granted tok/step, {lo['mixed_ms']:.2f} ms; "
-              f"budget {caps[-1]} -> {hi['granted']:.1f} tok/step, "
+              f"{lo['mixed_ms']:.2f} ms; budget {caps[-1]} -> "
               f"{hi['mixed_ms']:.2f} ms")
 
     # the acceptance point: packed at budget=4 beats the dense mixed step
-    d4, p4 = rows[(4, False)]["mixed_ms"], rows[(4, True)]["mixed_ms"]
+    d4, p4 = rows[(4, "dense")]["mixed_ms"], rows[(4, "packed")]["mixed_ms"]
     print(f"\nbudget=4 mixed step: dense {d4:.2f} ms vs packed {p4:.2f} ms "
           f"({d4 / p4:.2f}x)")
     if p4 >= d4:
@@ -153,7 +203,58 @@ def bench_packed_ab(params, cfg, args):
             f"FAIL: packed mixed step ({p4:.2f} ms) not faster than dense "
             f"({d4:.2f} ms) at token_budget=4"
         )
-    print("PASS: outputs identical, packed step wall scales with granted tokens")
+    print("PASS: outputs identical across dense/packed/paged, packed step "
+          "wall scales with granted tokens")
+    return records
+
+
+def bench_prefix_sharing(params, cfg, args):
+    """Prefix-sharing record: a second request sharing a 256-token prefix
+    must map the first one's pages — fewer prefill steps, fewer pool
+    pages — with outputs identical to recomputing from scratch."""
+    rng = np.random.default_rng(11)
+    plen = max(args.prompt_len, 256)
+    prefix = rng.integers(0, cfg.vocab_size, size=256).tolist()
+    tails = [rng.integers(0, cfg.vocab_size, size=plen - 256).tolist()
+             for _ in range(2)]
+    disjoint = [rng.integers(0, cfg.vocab_size, size=plen).tolist()
+                for _ in range(2)]
+
+    def serve_two(prompts):
+        eng = ContinuousBatcher(
+            params, cfg, batch_slots=args.batch, max_len=plen + args.new_tokens,
+            chunk_size=16, cache="paged", page_size=16,
+        )
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=args.new_tokens))
+            eng.run()  # sequential: request 1 arrives after request 0 finished
+        return eng
+
+    shared = serve_two([prefix + tails[0], prefix + tails[1]])
+    control = serve_two(disjoint)
+    rec = {
+        "prompt_len": plen,
+        "shared_prefix_tokens": int(sum(s.shared_tokens for s in shared.step_stats)),
+        "second_request_prefill_steps": {
+            "shared": shared.finished[1].ttft_steps,
+            "disjoint": control.finished[1].ttft_steps,
+        },
+        "touched_pages": {
+            "shared": shared.kv.tables.touched_pages,
+            "disjoint": control.kv.tables.touched_pages,
+        },
+    }
+    print(f"\nprefix sharing ({plen}-token prompts, 256 shared): second "
+          f"request TTFT {rec['second_request_prefill_steps']['shared']} steps "
+          f"vs {rec['second_request_prefill_steps']['disjoint']} disjoint; "
+          f"pool pages {rec['touched_pages']['shared']} vs "
+          f"{rec['touched_pages']['disjoint']}")
+    if not (rec["touched_pages"]["shared"] < rec["touched_pages"]["disjoint"]):
+        raise SystemExit("FAIL: shared-prefix requests did not save pool pages")
+    if not (rec["second_request_prefill_steps"]["shared"]
+            < rec["second_request_prefill_steps"]["disjoint"]):
+        raise SystemExit("FAIL: shared-prefix request did not save prefill steps")
+    return rec
 
 
 def main():
@@ -167,8 +268,11 @@ def main():
                     help="0 = uncapped; defaults to '0 64' for the chunk "
                          "sweep and '4 64' for --packed")
     ap.add_argument("--packed", action="store_true",
-                    help="dense-vs-packed A/B: step wall must scale with "
-                         "granted tokens")
+                    help="dense/packed/paged A/B: step wall must scale with "
+                         "granted tokens; includes the prefix-sharing record")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable perf records (e.g. "
+                         "BENCH_serve.json; the CI full lane does)")
     args = ap.parse_args()
     if args.budgets is None:
         args.budgets = [4, 64] if args.packed else [0, 64]
@@ -181,8 +285,24 @@ def main():
           f"{args.requests} requests x {args.prompt_len}-token prompts, "
           f"{args.batch} slots")
 
+    def dump(payload):
+        if args.json:
+            meta = {
+                "bench": "serve_throughput",
+                "model": {"name": cfg.name, "params": cfg.param_count()},
+                "workload": {
+                    "requests": args.requests, "prompt_len": args.prompt_len,
+                    "new_tokens": args.new_tokens, "batch_slots": args.batch,
+                },
+            }
+            with open(args.json, "w") as f:
+                json.dump({**meta, **payload}, f, indent=2)
+            print(f"wrote {args.json}")
+
     if args.packed:
-        bench_packed_ab(params, cfg, args)
+        records = bench_modes_ab(params, cfg, args)
+        prefix_rec = bench_prefix_sharing(params, cfg, args)
+        dump({"rows": records, "prefix_sharing": prefix_rec})
         return
 
     base = bench(params, cfg, args, chunk=1, budget=None)
@@ -204,6 +324,7 @@ def main():
               f"{r['steps']:>6} {r['max_step_tokens']:>13.0f} "
               f"{r['mean_ttft_ms']:>13.1f} {'same' if same else 'DIFF':>8}")
 
+    dump({"rows": [{k: v for k, v in r.items() if k != "outputs"} for r in rows]})
     best = max(rows[1:], key=lambda r: r["prefill_tok_s"])
     speedup = best["prefill_tok_s"] / base["prefill_tok_s"]
     print(f"\nbest chunked config: chunk={best['chunk']} budget={best['budget']} "

@@ -34,6 +34,20 @@ def main():
     ap.add_argument("--packed", action="store_true",
                     help="token-packed step program: granted tokens alone "
                          "determine per-step compute")
+    ap.add_argument("--cache", default="dense", choices=["dense", "paged"],
+                    help="KV-cache layout (repro.serve.kv): paged = page "
+                         "pool + block tables + prefix sharing")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="give every prompt the same N-token prefix; with "
+                         "--cache paged, later requests map the first "
+                         "one's pages instead of re-prefilling them. "
+                         "Sharing needs the prefix pages to be fully "
+                         "written first, so it kicks in for requests that "
+                         "trail an earlier one (queued past the slot "
+                         "count, or budget-staggered) — slots prefilling "
+                         "the same prefix in lockstep each write their "
+                         "own copy")
     ap.add_argument("--arch", default="",
                     help="optional smoke-config name (e.g. mixtral-8x22b)")
     args = ap.parse_args()
@@ -56,12 +70,18 @@ def main():
         chunk_size=args.chunk_size,
         token_budget=args.token_budget or None,
         packed=args.packed,
+        cache=args.cache, page_size=args.page_size,
     )
 
     rng = np.random.default_rng(1)
+    n_prefix = min(args.shared_prefix, max(args.prompt_len - 1, 0))
+    prefix = rng.integers(0, cfg.vocab_size, size=n_prefix).tolist()
     for uid in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len).tolist()
-        eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=args.new_tokens))
+        tail = rng.integers(
+            0, cfg.vocab_size, size=args.prompt_len - n_prefix
+        ).tolist()
+        eng.submit(Request(uid=uid, prompt=prefix + tail,
+                           max_new_tokens=args.new_tokens))
 
     t0 = time.time()
     done = eng.run()
@@ -78,6 +98,11 @@ def main():
     print(f"  max step tokens {s['max_step_tokens']:.0f}  "
           f"deferred {s['deferred_tokens']:.0f}  "
           f"max step wall {s['max_step_wall']*1e3:.1f} ms")
+    if eng.kv is not None:
+        print(f"  paged KV: {s['peak_used_pages']:.0f}/{s['num_pages']:.0f} "
+              f"peak pages used ({args.page_size} tokens each), "
+              f"{s['shared_tokens']:.0f} prompt tokens served from "
+              f"prefix-shared pages")
     r0 = done[0]
     print("sample continuation:", r0.output[:12])
 

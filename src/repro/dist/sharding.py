@@ -24,6 +24,7 @@ never used twice in one spec.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
@@ -207,13 +208,31 @@ def cache_shardings(cache: PyTree, mesh, shard_seq: bool = False) -> PyTree:
     ``shard_seq=True``: shard the KV *sequence* dim over "data" instead of
     batch — for long-context decode where global_batch < dp_size (e.g.
     long_500k's single sequence on the production mesh).
+
+    Accepts the legacy cache dict or a ``repro.serve.kv.KVState`` (the
+    result mirrors the input container).  For the *paged* layout the KV
+    leaves are ``(num_pages, page_size, kv_heads, hd)`` pools: the page
+    dim takes the data axes (the pool is the batch-like dim now), heads
+    take "model", and the block tables — a few KiB of int32 indices every
+    device needs for its gathers — stay replicated.  Serving a paged
+    cache under a Distribution additionally needs the mesh-aware page
+    gather (``ContinuousBatcher`` raises ``UnsupportedDistError`` until
+    the multi-host serving mesh lands); these placements are what that
+    path will consume.
     """
     dp = dp_axes(mesh)
+    tables = getattr(cache, "tables", None)
+    data = getattr(cache, "data", cache)
+    paged = tables is not None
 
     def leaf(kp, x):
         name = _path_str(kp).rsplit("/", 1)[-1]
         nd = len(x.shape)
-        if name in ("k", "v") and nd == 4:
+        if paged and name in ("k", "v") and nd >= 4:
+            # (…, num_pages, page_size, kv_heads, hd); group-scanned
+            # leaves carry a leading n_groups dim — right-align.
+            axes = (None,) * (nd - 4) + (dp, None, "model", None)
+        elif name in ("k", "v") and nd == 4:
             axes = (None, ("data",), "model", None) if shard_seq else (dp, None, "model", None)
         elif nd >= 2:
             axes = (dp,) + (None,) * (nd - 2) + ("model",)
@@ -221,7 +240,14 @@ def cache_shardings(cache: PyTree, mesh, shard_seq: bool = False) -> PyTree:
             axes = (dp,)
         return NamedSharding(mesh, _fit_spec(x.shape, axes, mesh))
 
-    return jax.tree_util.tree_map_with_path(leaf, cache)
+    data_sh = jax.tree_util.tree_map_with_path(leaf, data)
+    if hasattr(cache, "data"):
+        return dataclasses.replace(
+            cache,
+            data=data_sh,
+            tables=NamedSharding(mesh, P()) if paged else None,
+        )
+    return data_sh
 
 
 def batch_spec(mesh, global_batch: int) -> P:

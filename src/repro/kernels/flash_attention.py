@@ -156,3 +156,133 @@ def flash_attention(
         interpret=interpret,
     )(*operands)
     return out.reshape(b, h, sq, d)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: gather-by-block-table (the repro.serve.kv Paged layout)
+# ---------------------------------------------------------------------------
+
+
+def _paged_attn_kernel(
+    q_ref, k_ref, v_ref, tbl_ref, pos_ref, slot_ref, o_ref,
+    *, page_size, num_pages, num_blocks, window, sm_scale,
+):
+    q = q_ref[...].astype(jnp.float32) * sm_scale  # (d,)
+    pos = pos_ref[...]
+    slot = slot_ref[...]
+    valid_q = slot >= 0
+    slot_s = jnp.maximum(slot, 0)
+
+    # Admissible logical-block range for this query: its slot's blocks up
+    # to (and including) its own position's block, lower-bounded by the
+    # sliding window.  Skipped blocks cost nothing — decode reads exactly
+    # ceil((pos+1)/page_size) pages, not the whole pool.
+    hi = jnp.where(valid_q, jnp.minimum(pos // page_size + 1, num_blocks), 0)
+    if window > 0:
+        lo = jnp.maximum((pos - window + 1) // page_size, 0)
+    else:
+        lo = 0
+
+    def body(bi, carry):
+        acc, m_prev, l_prev = carry
+        page = tbl_ref[slot_s, bi]
+        ok = page < num_pages  # unallocated-block sentinel
+        page_s = jnp.minimum(page, num_pages - 1)
+        k_tile = pl.load(
+            k_ref, (pl.dslice(page_s * page_size, page_size), slice(None))
+        )  # (page_size, d)
+        v_tile = pl.load(
+            v_ref, (pl.dslice(page_s * page_size, page_size), slice(None))
+        )
+        s = jnp.dot(k_tile.astype(jnp.float32), q)  # (page_size,)
+        kpos = bi * page_size + jax.lax.iota(jnp.int32, page_size)
+        mask = (kpos <= pos) & ok
+        if window > 0:
+            mask &= kpos > pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_cur = l_prev * alpha + jnp.sum(p)
+        acc = acc * alpha + jnp.dot(p, v_tile.astype(jnp.float32))
+        return acc, m_cur, l_cur
+
+    d = q_ref.shape[-1]
+    acc0 = jnp.zeros((d,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(
+        lo, hi, body, (acc0, jnp.float32(NEG_INF), jnp.float32(0.0))
+    )
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def paged_flash_attention(
+    q: jnp.ndarray,  # (T, H, D) packed query tokens
+    k_pool: jnp.ndarray,  # (num_pages, page_size, KV, D)
+    v_pool: jnp.ndarray,  # (num_pages, page_size, KV, D)
+    tables: jnp.ndarray,  # (num_slots, num_blocks) int32
+    q_pos: jnp.ndarray,  # (T,) absolute position per query token
+    q_slots: jnp.ndarray,  # (T,) cache slot per query token; < 0 = padding
+    window: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Flash attention over a paged KV pool (vLLM-style paged attention).
+
+    The serving engine's token-packed decode/prefill step addresses KV by
+    ``(slot, position)``; under the ``repro.serve.kv`` Paged layout the
+    physical row is ``(tables[slot, position // page_size], position %
+    page_size)``.  Instead of materializing each token's logical buffer
+    (what the jnp path does), the kernel walks the query's *block table*:
+    one program per (token, head) runs the online-softmax loop over that
+    slot's admissible logical blocks only, loading each key tile by its
+    page id — the loop never reads another slot's pages, so cross-request
+    isolation is structural, not a mask (adversarially tested in
+    ``tests/test_kernels.py``).  Entries with ``tables[s, b] >=
+    num_pages`` (the unallocated sentinel) are mask-dropped; padding
+    queries (``q_slots < 0``) return zero rows.
+
+    Like the dense kernel above (whole-K block specs), each program
+    *stages* the full per-head pool as one Pallas block and prunes reads
+    inside it, which bounds the pool at VMEM size on real hardware
+    (~16 MiB: fine for the serving shapes this repo compiles, not for a
+    production multi-GiB pool).  Lifting that bound needs the
+    scalar-prefetch grid spec (``pltpu.PrefetchScalarGridSpec``) DMA-ing
+    pages by table entry — the known TPU follow-up.
+
+    The jnp oracle is ``repro.kernels.ref.paged_attention_ref``.
+    """
+    t, h, d = q.shape
+    num_pages, page_size, kvh, _ = k_pool.shape
+    num_slots, num_blocks = tables.shape
+    g = h // kvh
+
+    # (KV, num_pages * page_size, D): one flat row pool per KV head, so a
+    # page id turns into a dslice start inside the kernel.
+    kr = k_pool.transpose(2, 0, 1, 3).reshape(kvh, num_pages * page_size, d)
+    vr = v_pool.transpose(2, 0, 1, 3).reshape(kvh, num_pages * page_size, d)
+
+    kernel = functools.partial(
+        _paged_attn_kernel,
+        page_size=page_size, num_pages=num_pages, num_blocks=num_blocks,
+        window=window, sm_scale=1.0 / math.sqrt(d),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(t, h),
+        in_specs=[
+            pl.BlockSpec((None, None, d), lambda i, j: (i, j, 0)),  # q token/head
+            pl.BlockSpec((None, num_pages * page_size, d), lambda i, j, g=g: (j // g, 0, 0)),
+            pl.BlockSpec((None, num_pages * page_size, d), lambda i, j, g=g: (j // g, 0, 0)),
+            pl.BlockSpec((num_slots, num_blocks), lambda i, j: (0, 0)),
+            pl.BlockSpec((None,), lambda i, j: (i,)),
+            pl.BlockSpec((None,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((None, None, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h, d), q.dtype),
+        interpret=interpret,
+    )(
+        q, kr, vr,
+        tables.astype(jnp.int32),
+        q_pos.astype(jnp.int32),
+        q_slots.astype(jnp.int32),
+    )
+    return out

@@ -10,7 +10,10 @@ import functools
 
 import jax
 
-from .flash_attention import flash_attention as _flash
+from .flash_attention import (
+    flash_attention as _flash,
+    paged_flash_attention as _paged_flash,
+)
 from .masked_accum import masked_accum as _maccum, masked_accum_tree as _maccum_tree
 from .rmsnorm import rmsnorm as _rmsnorm
 from .ssd_chunk import ssd_chunk as _ssd_chunk
@@ -28,6 +31,15 @@ def flash_attention(q, k, v, causal=True, window=0, block_q=128, block_k=128,
     return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
                   block_k=block_k, interpret=interpret,
                   q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_flash_attention(q, k_pool, v_pool, tables, q_pos, q_slots,
+                          window=0, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _paged_flash(q, k_pool, v_pool, tables, q_pos, q_slots,
+                        window=window, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))

@@ -45,6 +45,43 @@ def flash_attention_ref(
     return out.reshape(b, h, sq, d).astype(q.dtype)
 
 
+def paged_attention_ref(
+    q: jnp.ndarray,  # (T, H, D) packed query tokens
+    k_pool: jnp.ndarray,  # (num_pages, page_size, KV, D)
+    v_pool: jnp.ndarray,  # (num_pages, page_size, KV, D)
+    tables: jnp.ndarray,  # (num_slots, num_blocks) int32
+    q_pos: jnp.ndarray,  # (T,) absolute positions
+    q_slots: jnp.ndarray,  # (T,) slot per query; < 0 = padding
+    window: int = 0,
+) -> jnp.ndarray:
+    """Naive paged attention: materialize each query's logical KV buffer
+    by gathering its slot's pages through the block table, then mask by
+    position (causal / sliding window) and unallocated-block sentinel
+    (``tables[s, b] >= num_pages``).  Padding queries return zero rows."""
+    t, h, d = q.shape
+    num_pages, page_size, kvh, _ = k_pool.shape
+    nb = tables.shape[1]
+    g = h // kvh
+    valid_q = q_slots >= 0
+    pages = tables[jnp.clip(q_slots, 0, tables.shape[0] - 1)]  # (T, NB)
+    page_ok = pages < num_pages
+    safe = jnp.clip(pages, 0, num_pages - 1)
+    keys = k_pool[safe].reshape(t, nb * page_size, kvh, d)
+    vals = v_pool[safe].reshape(t, nb * page_size, kvh, d)
+    qg = q.reshape(t, kvh, g, d).astype(jnp.float32) / math.sqrt(d)
+    logits = jnp.einsum("thgd,tkhd->thgk", qg, keys.astype(jnp.float32))
+    kpos = jnp.arange(nb * page_size)
+    mask = (kpos[None, :] <= q_pos[:, None]) & valid_q[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > q_pos[:, None] - window
+    mask &= jnp.repeat(page_ok, page_size, axis=1)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("thgk,tkhd->thgd", w, vals.astype(jnp.float32))
+    out = jnp.where(valid_q[:, None, None, None], out, 0.0)
+    return out.reshape(t, h, d).astype(q.dtype)
+
+
 def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
     xf = x.astype(jnp.float32)
     y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)

@@ -1,9 +1,21 @@
-"""Compatibility shim — mesh construction moved to ``repro.dist.mesh``.
+"""Deprecated compatibility shim — mesh construction lives in
+``repro.dist.mesh``.
 
-Kept so existing imports (``repro.launch.mesh.make_dev_mesh`` etc.)
-continue to work; new code should import from ``repro.dist``.
+Importing this module works but warns: every in-repo caller has been
+migrated to ``repro.dist`` (PR 2 moved the implementation; this PR turned
+the silent re-export into a ``DeprecationWarning``), and the shim will be
+dropped once external callers have had a release to follow.
 """
-from ..dist.mesh import (  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.launch.mesh is deprecated; import from repro.dist.mesh "
+    "(or the repro.dist package) instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from ..dist.mesh import (  # noqa: F401,E402
     HW,
     axes_size,
     axis_types_kwargs,

@@ -335,6 +335,45 @@ def _pad_heads_for_tp(q, k, v):
     return q, k, v, h
 
 
+# ---------------------------------------------------------------------------
+# Paged KV addressing (the jit half of repro.serve.kv's Paged layout).
+# Defined here — not in serve.kv — because both the attention paths below
+# and the serve package need it, and models must not import serve.
+# ---------------------------------------------------------------------------
+
+
+def paged_index(tables, slots, positions, page_size: int, num_pages: int):
+    """Translate absolute ``(slot, position)`` into physical ``(page,
+    offset)`` through the block tables.
+
+    tables: (num_slots, num_blocks) int32, with ``num_pages`` marking
+    unallocated blocks.  ``slots``/``positions`` are broadcast-compatible
+    integer arrays.  Positions past the logical buffer (the padding
+    convention) and unallocated blocks come back as ``page == num_pages``
+    — out of range, so ``.at[...].set(..., mode="drop")`` discards the
+    write and gathers never fetch them.
+    """
+    nb = tables.shape[-1]
+    blk = positions // page_size
+    page = tables[slots, jnp.minimum(blk, nb - 1)]
+    return jnp.where(blk < nb, page, num_pages), positions % page_size
+
+
+def paged_gather(pool, tables, slots):
+    """Materialize each entry's logical KV buffer from the page pool.
+
+    pool: (num_pages, page_size, kv, hd); tables: (num_slots, num_blocks);
+    slots: (X,) int32.  Returns (X, num_blocks * page_size, kv, hd) in
+    logical-position order (pages hold contiguous positions).  Rows behind
+    unallocated blocks read clamped garbage — callers mask them (positions
+    above a slot's write cursor are never attended).
+    """
+    num_pages = pool.shape[0]
+    pages = jnp.clip(tables[slots], 0, num_pages - 1)  # (X, num_blocks)
+    out = pool[pages]  # (X, num_blocks, page_size, kv, hd)
+    return out.reshape(out.shape[0], -1, *pool.shape[2:])
+
+
 def causal_mask(sq: int, sk: int, q_offset=0, window: int = 0) -> jnp.ndarray:
     """(1, 1, Sq, Sk) boolean mask; window>0 = sliding window."""
     qpos = jnp.arange(sq)[:, None] + q_offset
@@ -356,6 +395,8 @@ def apply_attention(
     decode_pos: Optional[jnp.ndarray] = None,
     seq_lens: Optional[jnp.ndarray] = None,
     slot_ids: Optional[jnp.ndarray] = None,
+    page_tables: Optional[jnp.ndarray] = None,
+    page_size: int = 0,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """One attention block application.
 
@@ -381,6 +422,15 @@ def apply_attention(
     each other.  ``slot_ids[j] < 0`` marks padding: no cache write, all
     keys masked, output ignored.  Requires a linear cache, like the
     chunked path.
+
+    page_tables / page_size (paged KV layout, ``repro.serve.kv``): the
+    cache leaves are a flat ``(num_pages, page_size, KV, D)`` pool shared
+    by every slot instead of per-slot rows; all scatter/gather goes
+    through the layout's ``paged_index`` / ``paged_gather`` translation
+    (``(slot, pos)`` -> ``(table[slot, pos // page_size], pos % page_size)``).
+    The decode/chunked/packed semantics above are unchanged — the paged
+    layout is token-identical to the dense one; only the physical
+    addressing differs.  Paged decode needs per-slot positions.
     """
     cd = cfg.compute_dtype
     window = cfg.sliding_window if kind == "L" else 0
@@ -410,7 +460,10 @@ def apply_attention(
         # silently drop writes past the window instead of erroring.
         if cache is None:
             raise ValueError("packed step needs a decode cache")
-        buf_len = cache["k"].shape[1]
+        if page_tables is not None:
+            buf_len = page_tables.shape[-1] * page_size
+        else:
+            buf_len = cache["k"].shape[1]
         if window > 0 and buf_len <= window:
             raise ValueError(
                 f"packed step needs a linear cache "
@@ -422,14 +475,26 @@ def apply_attention(
         valid = slots >= 0
         slot_safe = jnp.where(valid, slots, 0)
         wp = jnp.where(valid, pos, buf_len)  # OOB => dropped by scatter
-        ck = cache["k"].at[slot_safe, wp].set(
-            k[0].astype(cache["k"].dtype), mode="drop"
-        )
-        cv = cache["v"].at[slot_safe, wp].set(
-            v[0].astype(cache["v"].dtype), mode="drop"
-        )
-        kk = jnp.take(ck, slot_safe, axis=0)  # (P, L, KV, D)
-        vv = jnp.take(cv, slot_safe, axis=0)
+        if page_tables is not None:
+            num_pages = cache["k"].shape[0]
+            page, off = paged_index(page_tables, slot_safe, wp, page_size, num_pages)
+            ck = cache["k"].at[page, off].set(
+                k[0].astype(cache["k"].dtype), mode="drop"
+            )
+            cv = cache["v"].at[page, off].set(
+                v[0].astype(cache["v"].dtype), mode="drop"
+            )
+            kk = paged_gather(ck, page_tables, slot_safe)  # (P, L, KV, D)
+            vv = paged_gather(cv, page_tables, slot_safe)
+        else:
+            ck = cache["k"].at[slot_safe, wp].set(
+                k[0].astype(cache["k"].dtype), mode="drop"
+            )
+            cv = cache["v"].at[slot_safe, wp].set(
+                v[0].astype(cache["v"].dtype), mode="drop"
+            )
+            kk = jnp.take(ck, slot_safe, axis=0)  # (P, L, KV, D)
+            vv = jnp.take(cv, slot_safe, axis=0)
         kpos_idx = jnp.arange(buf_len)
         m = (kpos_idx[None, :] <= pos[:, None]) & valid[:, None]
         if window > 0:
@@ -461,13 +526,17 @@ def apply_attention(
         # columns (col >= seq_lens[i]) scatter out of range and are
         # dropped, so previously written rows are never clobbered; active
         # write positions are distinct, so the scatter is race-free.
-        buf_len = cache["k"].shape[1]
+        if page_tables is not None:
+            buf_len = page_tables.shape[-1] * page_size
+        else:
+            buf_len = cache["k"].shape[1]
         b, c = x.shape[:2]
         pos = jnp.asarray(decode_pos)
         assert pos.ndim == 1, "chunked prefill needs per-slot positions"
         # A ring buffer (buf_len == window < seq_len) would silently drop
         # writes past the window here; require the linear layout.  (When
-        # seq_len <= window the "ring" never wraps and buf_len != window.)
+        # seq_len <= window the "ring" never wraps and buf_len != window;
+        # the paged pool is linear by construction.)
         assert window == 0 or buf_len > window, (
             f"chunked prefill needs a linear cache "
             f"(init_decode_cache(..., linear=True)); got ring buffer of "
@@ -479,13 +548,43 @@ def apply_attention(
         active = offs[None, :] < lens[:, None]  # (B, C)
         wp = jnp.where(active, qpos, buf_len)  # OOB => dropped by scatter
         bidx = jnp.arange(b)[:, None]
-        ck = cache["k"].at[bidx, wp].set(k.astype(cache["k"].dtype), mode="drop")
-        cv = cache["v"].at[bidx, wp].set(v.astype(cache["v"].dtype), mode="drop")
+        if page_tables is not None:
+            num_pages = cache["k"].shape[0]
+            page, off = paged_index(page_tables, bidx, wp, page_size, num_pages)
+            ck = cache["k"].at[page, off].set(k.astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[page, off].set(v.astype(cache["v"].dtype), mode="drop")
+            kk = paged_gather(ck, page_tables, jnp.arange(b))  # (B, L, KV, D)
+            vv = paged_gather(cv, page_tables, jnp.arange(b))
+        else:
+            ck = cache["k"].at[bidx, wp].set(k.astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[bidx, wp].set(v.astype(cache["v"].dtype), mode="drop")
+            kk, vv = ck, cv
         kpos_idx = jnp.arange(buf_len)
         valid = kpos_idx[None, None, :] <= qpos[..., None]  # (B, C, L)
         if window > 0:
             valid &= kpos_idx[None, None, :] > qpos[..., None] - window
-        out = sdpa(q, ck.astype(cd), cv.astype(cd), valid[:, None], cfg.logit_softcap)
+        out = sdpa(q, kk.astype(cd), vv.astype(cd), valid[:, None], cfg.logit_softcap)
+        cache = {"k": ck, "v": cv}
+    elif page_tables is not None:
+        # Paged decode: one token per slot, addressed through the block
+        # table.  Linear semantics (the window is enforced by the mask),
+        # so no ring-position reconstruction is needed.
+        pos = jnp.asarray(decode_pos)
+        if pos.ndim == 0:
+            raise ValueError("paged decode needs per-slot positions, got a scalar")
+        buf_len = page_tables.shape[-1] * page_size
+        num_pages = cache["k"].shape[0]
+        bidx = jnp.arange(q.shape[0])
+        page, off = paged_index(page_tables, bidx, pos, page_size, num_pages)
+        ck = cache["k"].at[page, off].set(k[:, 0].astype(cache["k"].dtype), mode="drop")
+        cv = cache["v"].at[page, off].set(v[:, 0].astype(cache["v"].dtype), mode="drop")
+        kk = paged_gather(ck, page_tables, bidx)  # (B, L, KV, D)
+        vv = paged_gather(cv, page_tables, bidx)
+        kpos_idx = jnp.arange(buf_len)
+        valid = kpos_idx[None, :] <= pos[:, None]
+        if window > 0:
+            valid &= kpos_idx[None, :] > pos[:, None] - window
+        out = sdpa(q, kk.astype(cd), vv.astype(cd), valid[:, None, None, :], cfg.logit_softcap)
         cache = {"k": ck, "v": cv}
     else:
         # Decode: write K/V at cache position, attend over the buffer.

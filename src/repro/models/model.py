@@ -14,6 +14,7 @@
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -248,6 +249,27 @@ def require_chunkable(cfg: ModelConfig, what: str = "chunked prefill") -> None:
         raise UnsupportedPatternError(f"{what} does not support enc-dec models")
 
 
+def _cache_parts(cache):
+    """Split a decode cache into (data, page_tables, page_size).
+
+    Every serving path accepts either the legacy cache dict (dense slots)
+    or a ``repro.serve.kv.KVState`` — duck-typed on its ``data`` attribute
+    so ``models`` never imports ``serve``.  For a dense ``KVState`` (or a
+    plain dict) the tables are ``None`` and the model paths behave exactly
+    as before; for a paged one, every scatter/gather translates
+    ``(slot, position)`` through the block tables.
+    """
+    data = getattr(cache, "data", cache)
+    return data, getattr(cache, "tables", None), getattr(cache, "page_size", 0)
+
+
+def _cache_rebuild(cache, new_data):
+    """Rewrap updated cache data in the caller's container type."""
+    if hasattr(cache, "data"):
+        return dataclasses.replace(cache, data=new_data)
+    return new_data
+
+
 def init_decode_cache(
     params: PyTree,
     cfg: ModelConfig,
@@ -261,6 +283,10 @@ def init_decode_cache(
     linear=True allocates full-length (non-ring) buffers for sliding-window
     layers; required by ``prefill_chunk`` (the serving engine), whose
     multi-token scatter writes assume absolute positions never wrap.
+
+    This builds the dense-slot layout; serving callers that want paged KV
+    (or the cache API in general) go through ``repro.serve.kv.KVCacheSpec``
+    — every decode path here accepts its ``KVState`` in place of the dict.
     """
     if cfg.is_encdec:
         # the enc-dec decoder stack is tail-only (see init_params): its
@@ -311,19 +337,25 @@ def prefill_chunk(
     reusing the host-side token/position buffers: with async dispatch,
     jax<=0.4 CPU can read freed host memory mid-execution otherwise.
     ``ContinuousBatcher`` does this for you.
+
+    ``cache`` is the legacy dict from ``init_decode_cache`` or a
+    ``repro.serve.kv.KVState`` (dense or paged); the returned cache has
+    the same container type as the input.
     """
     require_chunkable(cfg, "chunked prefill")
+    data, tables, page_size = _cache_parts(cache)
     pos = jnp.asarray(pos)
     c = tokens.shape[1]
     positions = pos[:, None] + jnp.arange(c)[None, :]  # (B, C) for RoPE
     x = L.embed(params["embed"], tokens, cfg, positions)
     x, new_stack, _ = apply_stack(
-        params["stack"], x, cfg, positions, cache["stack"],
+        params["stack"], x, cfg, positions, data["stack"],
         decode_pos=pos, seq_lens=jnp.asarray(seq_lens), moe_impl=moe_impl,
+        page_tables=tables, page_size=page_size,
     )
     x = L.apply_norm(params["final_norm"], x, cfg)
     logits = L.unembed(params["embed"], x, cfg)
-    return logits, {"stack": new_stack}
+    return logits, _cache_rebuild(cache, {"stack": new_stack})
 
 
 def packed_prefill(
@@ -347,19 +379,23 @@ def packed_prefill(
     ``apply_attention``), so requests packed side by side can never leak
     into each other.  Returns logits (P, V); the caller reads each slot's
     final granted row.  Same cache contract as ``prefill_chunk``:
-    ``init_decode_cache(..., linear=True)``, attention-only patterns.
+    ``init_decode_cache(..., linear=True)``, attention-only patterns —
+    or a paged ``repro.serve.kv.KVState``, whose block tables route every
+    ``(slot, position)`` to its physical page row.
     """
     require_chunkable(cfg, "packed prefill")
+    data, tables, page_size = _cache_parts(cache)
     tokens = jnp.asarray(tokens)[None]  # (1, P)
     pos2 = jnp.asarray(positions)[None]  # (1, P)
     x = L.embed(params["embed"], tokens, cfg, pos2)
     x, new_stack, _ = apply_stack(
-        params["stack"], x, cfg, pos2, cache["stack"],
+        params["stack"], x, cfg, pos2, data["stack"],
         slot_ids=jnp.asarray(slot_ids), moe_impl=moe_impl,
+        page_tables=tables, page_size=page_size,
     )
     x = L.apply_norm(params["final_norm"], x, cfg)
     logits = L.unembed(params["embed"], x, cfg)
-    return logits[0], {"stack": new_stack}
+    return logits[0], _cache_rebuild(cache, {"stack": new_stack})
 
 
 def decode_step(
@@ -370,30 +406,34 @@ def decode_step(
     pos: jnp.ndarray,  # scalar int32, or (B,) per-slot positions
     moe_impl: str = "dense",
 ) -> Tuple[jnp.ndarray, PyTree]:
+    data, tables, page_size = _cache_parts(cache)
     pos = jnp.asarray(pos)
     positions = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
     x = L.embed(params["embed"], token, cfg, positions)
 
+    if tables is not None and cfg.is_encdec:
+        raise UnsupportedPatternError("paged KV does not support enc-dec models")
     if cfg.is_encdec:
         new_tail = []
         for blk, c, kv in zip(
-            params["stack"]["tail"], cache["stack"]["tail"], cache["cross_kv"]
+            params["stack"]["tail"], data["stack"]["tail"], data["cross_kv"]
         ):
             x, nc, _ = apply_block(
                 blk, x, cfg, "G", positions, c, decode_pos=pos, enc_kv=kv
             )
             new_tail.append(nc)
-        new_cache = {
-            "stack": {"groups": cache["stack"]["groups"], "tail": new_tail},
-            "cross_kv": cache["cross_kv"],
+        new_data = {
+            "stack": {"groups": data["stack"]["groups"], "tail": new_tail},
+            "cross_kv": data["cross_kv"],
         }
     else:
         x, new_stack, _ = apply_stack(
-            params["stack"], x, cfg, positions, cache["stack"],
+            params["stack"], x, cfg, positions, data["stack"],
             decode_pos=pos, moe_impl=moe_impl,
+            page_tables=tables, page_size=page_size,
         )
-        new_cache = {"stack": new_stack}
+        new_data = {"stack": new_stack}
 
     x = L.apply_norm(params["final_norm"], x, cfg)
     logits = L.unembed(params["embed"], x, cfg)
-    return logits, new_cache
+    return logits, _cache_rebuild(cache, new_data)

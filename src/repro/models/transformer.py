@@ -104,6 +104,8 @@ def apply_block(
     moe_impl: str = "sort",
     seq_lens=None,
     slot_ids=None,
+    page_tables=None,
+    page_size: int = 0,
 ) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -113,7 +115,8 @@ def apply_block(
         attn_cache = None if cache is None else cache.get("attn")
         y, attn_cache = L.apply_attention(
             p["attn"], h, cfg, kind, positions, attn_cache, decode_pos=decode_pos,
-            seq_lens=seq_lens, slot_ids=slot_ids,
+            seq_lens=seq_lens, slot_ids=slot_ids, page_tables=page_tables,
+            page_size=page_size,
         )
         x = x + y
         if enc_kv is not None and "cross_attn" in p:
@@ -215,6 +218,8 @@ def apply_stack(
     moe_impl: str = "sort",
     seq_lens=None,
     slot_ids=None,
+    page_tables=None,
+    page_size: int = 0,
 ) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
     """Apply all layers. enc_kv_fn(block_params, ) is handled by encdec path
     in model.py via per-block cross KV computed there (cross_kv passed as a
@@ -234,7 +239,7 @@ def apply_stack(
             x, nc, a = apply_block(
                 group_params[j], x, cfg, kind, positions, cache_j,
                 decode_pos=decode_pos, moe_impl=moe_impl, seq_lens=seq_lens,
-                slot_ids=slot_ids,
+                slot_ids=slot_ids, page_tables=page_tables, page_size=page_size,
             )
             new_caches.append(nc)
             aux = aux + a
@@ -277,6 +282,7 @@ def apply_stack(
             x, nc, a = apply_block(
                 p, x, cfg, kind, positions, cache_i, decode_pos=decode_pos,
                 moe_impl=moe_impl, seq_lens=seq_lens, slot_ids=slot_ids,
+                page_tables=page_tables, page_size=page_size,
             )
         new_tail.append(nc)
         aux_total = aux_total + a

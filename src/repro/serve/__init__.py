@@ -1,13 +1,30 @@
 from ..models.model import UnsupportedPatternError
+from .block_table import OutOfPages, PagedTables, PageError
+from .kv import DenseSlots, KVCache, KVCacheSpec, KVState, Paged
 from .packing import PackedLayout, pack_step, packed_capacity
-from .scheduler import AdmissionError, ContinuousBatcher, Request, StepStats
+from .scheduler import (
+    AdmissionError,
+    ContinuousBatcher,
+    Request,
+    StepStats,
+    UnsupportedDistError,
+)
 
 __all__ = [
     "AdmissionError",
     "ContinuousBatcher",
+    "DenseSlots",
+    "KVCache",
+    "KVCacheSpec",
+    "KVState",
+    "OutOfPages",
     "PackedLayout",
+    "Paged",
+    "PagedTables",
+    "PageError",
     "Request",
     "StepStats",
+    "UnsupportedDistError",
     "UnsupportedPatternError",
     "pack_step",
     "packed_capacity",

@@ -1,0 +1,354 @@
+"""``repro.serve.kv`` — the first-class KV-cache API.
+
+The serving engine used to own a raw ``(B, L)`` slot cache and every
+consumer poked at its arrays directly.  This module makes the cache a
+contract instead:
+
+    spec = KVCacheSpec(num_slots=8, max_len=512, layout="paged")
+    kv = spec.build(params, cfg)            # -> KVCache (host handle)
+    logits, kv.state = prefill_chunk(params, cfg, kv.state, ...)
+
+``KVCache.state`` is a :class:`KVState` — a registered pytree the model
+paths (``prefill_chunk`` / ``packed_prefill`` / ``decode_step``) accept
+anywhere they accept the legacy cache dict.  Two interchangeable layouts:
+
+* :class:`DenseSlots` — today's ``(B, L)`` rows, one per slot, worst-case
+  provisioned.  Kept as the parity oracle: paged must be token-identical.
+* :class:`Paged` — a flat ``(num_pages, page_size)`` pool per layer plus
+  per-slot block tables (``repro.serve.block_table``).  A ``(slot, pos)``
+  cache address becomes ``(table[slot, pos // page_size], pos % page_size)``;
+  ref-counted pages let requests share a common prompt prefix's KV
+  (near-zero prefill for shared-prefix workloads) and copy-on-write keeps
+  forks safe.  Memory is provisioned for *actual* tokens, not worst case,
+  so the same bytes admit ~``max_len / mean_request_len`` x more
+  concurrent requests.
+
+The translation math itself (``paged_index`` / ``paged_gather``) lives in
+``repro.models.layers`` — the one place both this module and the model
+stack can import it without a cycle — and the layouts expose it as their
+``index``/``gather`` so kernels and tests program against the layout, not
+the arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import layers as L
+from ..models.model import init_decode_cache, require_chunkable
+from ..models.transformer import _unit_and_groups
+from .block_table import PagedTables
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# KVState — the device-side pytree every model cache path accepts
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KVState:
+    """Device KV state: the per-layer cache pytree plus, for the paged
+    layout, the block-table array.  ``page_size == 0`` means dense slots
+    (``tables`` is ``None`` and ``data`` is exactly the legacy cache
+    dict).  Registered as a pytree, so it passes through ``jax.jit``."""
+
+    data: PyTree
+    tables: Optional[jnp.ndarray] = None  # (num_slots, num_blocks) int32
+    page_size: int = 0  # static (pytree aux): 0 = dense
+
+    @property
+    def is_paged(self) -> bool:
+        return self.page_size > 0
+
+
+def _kvstate_flatten_with_keys(s: KVState):
+    children = (
+        (jax.tree_util.GetAttrKey("data"), s.data),
+        (jax.tree_util.GetAttrKey("tables"), s.tables),
+    )
+    return children, s.page_size
+
+
+def _kvstate_flatten(s: KVState):
+    return (s.data, s.tables), s.page_size
+
+
+def _kvstate_unflatten(aux, children) -> KVState:
+    return KVState(data=children[0], tables=children[1], page_size=aux)
+
+
+jax.tree_util.register_pytree_with_keys(
+    KVState, _kvstate_flatten_with_keys, _kvstate_unflatten, _kvstate_flatten
+)
+
+
+def copy_pages_state(state: KVState, ops: Sequence[Tuple[int, int]]) -> KVState:
+    """Apply ``(src, dst)`` page copies to every pool leaf (the device half
+    of copy-on-write).  Group-scanned leaves carry a leading ``n_groups``
+    dim; the page axis is right-aligned at rank 4."""
+    if not ops:
+        return state
+    src = jnp.asarray([s for s, _ in ops], jnp.int32)
+    dst = jnp.asarray([d for _, d in ops], jnp.int32)
+
+    def leaf(x):
+        if x.ndim == 5:  # (n_groups, num_pages, page_size, kv, hd)
+            return x.at[:, dst].set(x[:, src])
+        return x.at[dst].set(x[src])  # (num_pages, page_size, kv, hd)
+
+    return dataclasses.replace(state, data=jax.tree.map(leaf, state.data))
+
+
+# ---------------------------------------------------------------------------
+# Layouts
+# ---------------------------------------------------------------------------
+
+
+class DenseSlots:
+    """One ``(max_len,)`` row of KV per slot — the worst-case layout and
+    the parity oracle for :class:`Paged`."""
+
+    name = "dense"
+
+    @staticmethod
+    def build_data(spec: "KVCacheSpec", params: PyTree, cfg) -> PyTree:
+        return init_decode_cache(
+            params, cfg, spec.num_slots, spec.max_len, linear=True
+        )
+
+    @staticmethod
+    def index(slot, position):
+        """(slot, position) -> physical (row, column): the identity."""
+        return slot, position
+
+
+class Paged:
+    """Flat page pool + block tables; ``index``/``gather`` are the jit-side
+    translation used by ``models.layers`` and the paged flash kernel."""
+
+    name = "paged"
+
+    # the (slot, pos) -> (page, offset) translation and the pool -> logical
+    # buffer gather, shared with the attention paths (defined models-side
+    # to keep the import DAG acyclic)
+    index = staticmethod(L.paged_index)
+    gather = staticmethod(L.paged_gather)
+
+    @staticmethod
+    def build_data(spec: "KVCacheSpec", params: PyTree, cfg) -> PyTree:
+        require_chunkable(cfg, "the paged KV layout")
+        num_pages, ps = spec.resolve_pages(cfg), spec.page_size
+        kv, hd = cfg.n_kv_heads, cfg.hd
+
+        def one_layer():
+            z = jnp.zeros((num_pages, ps, kv, hd), cfg.compute_dtype)
+            return {"attn": {"k": z, "v": z + 0}}
+
+        unit, n_groups, tail = _unit_and_groups(cfg)
+        groups = tuple(
+            jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape).copy(),
+                one_layer(),
+            )
+            for _ in unit
+        )
+        tail_cs = [one_layer() for _ in range(tail)]
+        return {"stack": {"groups": groups, "tail": tail_cs}}
+
+
+_LAYOUTS = {DenseSlots.name: DenseSlots, Paged.name: Paged}
+
+
+# ---------------------------------------------------------------------------
+# Spec + host handle
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheSpec:
+    """Declarative description of a serving KV cache.
+
+    num_slots: concurrent requests the cache addresses (block tables).
+    max_len: maximum absolute position any slot may write.
+    layout: "dense" (worst-case rows, the oracle) or "paged".
+    page_size: tokens per page (paged only).
+    num_pages: pool size; ``None`` = worst-case provisioning
+        (``num_slots * blocks_per_slot`` — parity-safe; size it smaller to
+        oversubscribe on the actual-token distribution, which is the point).
+    """
+
+    num_slots: int
+    max_len: int
+    layout: str = "dense"
+    page_size: int = 16
+    num_pages: Optional[int] = None
+
+    def __post_init__(self):
+        if self.layout not in _LAYOUTS:
+            raise ValueError(f"unknown KV layout {self.layout!r}; want dense|paged")
+        assert self.num_slots >= 1 and self.max_len >= 1 and self.page_size >= 1
+
+    @property
+    def layout_cls(self):
+        return _LAYOUTS[self.layout]
+
+    def buffer_len(self, cfg) -> int:
+        """Logical per-slot buffer length: like ``linear=True`` dense
+        caches, sliding-window layers need ``window + 1`` rows even when
+        ``max_len`` is shorter (the window is enforced by masking)."""
+        buf = self.max_len
+        if "L" in cfg.pattern:
+            buf = max(buf, cfg.sliding_window + 1)
+        return buf
+
+    def blocks_per_slot(self, cfg) -> int:
+        return -(-self.buffer_len(cfg) // self.page_size)
+
+    def resolve_pages(self, cfg) -> int:
+        if self.num_pages is not None:
+            return self.num_pages
+        return self.num_slots * self.blocks_per_slot(cfg)
+
+    def memory_bytes(self, cfg) -> int:
+        """Cache bytes this spec allocates (all layers)."""
+        per_tok = 2 * cfg.n_kv_heads * cfg.hd  # k + v
+        itemsize = jnp.zeros((), cfg.compute_dtype).dtype.itemsize
+        n_attn = sum(1 for k in cfg.pattern if k in "GLB")
+        if self.layout == "paged":
+            rows = self.resolve_pages(cfg) * self.page_size
+        else:
+            rows = self.num_slots * self.buffer_len(cfg)
+        return rows * per_tok * itemsize * n_attn
+
+    def build(self, params: PyTree, cfg) -> "KVCache":
+        return KVCache(self, params, cfg)
+
+
+class KVCache:
+    """Host handle pairing a :class:`KVState` with its page bookkeeping.
+
+    The engine threads ``kv.state`` through the jitted step and calls the
+    mutating methods (``admit_slot`` / ``share`` / ``prepare_step`` /
+    ``free_slot`` / ``fork_slot``) between steps; every mutator keeps the
+    device block-table array in sync.  For the dense layout all of them
+    are no-ops — the two layouts are drop-in interchangeable.
+    """
+
+    def __init__(self, spec: KVCacheSpec, params: PyTree, cfg):
+        self.spec = spec
+        self.cfg = cfg
+        self._dirty = False
+        data = spec.layout_cls.build_data(spec, params, cfg)
+        if spec.layout == "paged":
+            self.tables: Optional[PagedTables] = PagedTables(
+                spec.num_slots,
+                spec.blocks_per_slot(cfg),
+                spec.resolve_pages(cfg),
+                spec.page_size,
+            )
+            self._state = KVState(
+                data=data,
+                tables=jnp.asarray(self.tables.device_tables()),
+                page_size=spec.page_size,
+            )
+        else:
+            self.tables = None
+            self._state = KVState(data=data, tables=None, page_size=0)
+
+    @property
+    def state(self) -> KVState:
+        """Device KV state.  Host-side table mutations are synced lazily:
+        the device array is rebuilt and uploaded once per read after any
+        number of admits/shares/frees, not once per mutation."""
+        if self._dirty:
+            self._state = dataclasses.replace(
+                self._state, tables=jnp.asarray(self.tables.device_tables())
+            )
+            self._dirty = False
+        return self._state
+
+    @state.setter
+    def state(self, new: KVState) -> None:
+        self._state = new
+
+    # -- layout-independent surface ----------------------------------------
+
+    @property
+    def page_size(self) -> int:
+        return self.spec.page_size if self.tables is not None else 0
+
+    @property
+    def num_pages(self) -> int:
+        return self.tables.num_pages if self.tables is not None else 0
+
+    @property
+    def used_pages(self) -> int:
+        return self.tables.used_pages if self.tables is not None else 0
+
+    def memory_bytes(self) -> int:
+        return sum(x.nbytes for x in jax.tree_util.tree_leaves(self._state.data))
+
+    def sync(self) -> None:
+        """Mark the device block tables stale; the next ``state`` read
+        rebuilds and uploads them (no-op for dense)."""
+        if self.tables is not None:
+            self._dirty = True
+
+    # -- mutators (no-ops for DenseSlots) -----------------------------------
+
+    def admit_slot(self, slot: int, prompt, max_new: int) -> Optional[int]:
+        """Reserve pages for a request; returns prompt tokens covered by
+        shared prefix pages (skip prefilling them), or None when the pool
+        cannot hold the request.  Dense: always admits, shares nothing."""
+        if self.tables is None:
+            return 0
+        shared = self.tables.admit(slot, prompt, max_new)
+        if shared is not None:
+            self.sync()
+        return shared
+
+    def share(self, slot: int, prompt, pos: int) -> int:
+        if self.tables is None:
+            return 0
+        n = self.tables.try_share(slot, prompt, pos)
+        if n:
+            self.sync()
+        return n
+
+    def prepare_step(self, grants) -> None:
+        """Allocate/COW the pages the step's grants will write, apply any
+        copy-on-write page copies device-side, sync the tables."""
+        if self.tables is None:
+            return
+        ops = []
+        for slot, pos0, toks in grants:
+            ops += self.tables.prepare_write(slot, pos0, len(toks))
+        if ops:
+            self.state = copy_pages_state(self.state, ops)
+        self.sync()
+
+    def prepare_write(self, slot: int, start: int, n: int) -> None:
+        self.prepare_step([(slot, start, [0] * n)])
+
+    def register_prompt_pages(self, slot: int, prompt, upto: int) -> None:
+        if self.tables is not None:
+            self.tables.register_prompt_pages(slot, prompt, upto)
+
+    def free_slot(self, slot: int) -> None:
+        if self.tables is not None:
+            self.tables.free_slot(slot)
+            self.sync()
+
+    def fork_slot(self, parent: int, child: int) -> None:
+        """Share every page of ``parent`` with ``child`` (copy-on-write on
+        the next write).  Dense layout: unsupported."""
+        if self.tables is None:
+            raise NotImplementedError("fork_slot requires the paged layout")
+        self.tables.fork(parent, child)
+        self.sync()

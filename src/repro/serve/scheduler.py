@@ -61,8 +61,18 @@ from ..models.model import (
     require_chunkable,
 )
 from . import packing
+from .kv import KVCache, KVCacheSpec
 
 PyTree = object
+
+
+class UnsupportedDistError(NotImplementedError):
+    """A serving mode was combined with a ``Distribution`` it cannot run
+    under yet.  ``packed=True`` and ``cache="paged"`` both address KV by
+    per-token indirection (slot gather / block tables) that would cross
+    the sharded slot axis every step — making that gather mesh-aware is
+    the ROADMAP "multi-host serving mesh" item.  Subclasses
+    ``NotImplementedError`` so pre-existing handlers keep working."""
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -123,6 +133,8 @@ class StepStats:
     prefill_tokens: int  # prompt tokens consumed this step
     deferred_tokens: int  # prompt tokens pushed past the deadline
     wall_time: float  # host-measured step duration (seconds)
+    shared_tokens: int = 0  # prompt tokens covered by prefix-cache pages
+    used_pages: int = 0  # paged layout: pages referenced after this step
 
     @property
     def scheduled_tokens(self) -> int:
@@ -162,6 +174,16 @@ class ContinuousBatcher:
         (``packing.packed_capacity``), so granted tokens alone determine
         per-step compute and the budget becomes a real compute bound.
         Scheduling and outputs are identical to the dense mode.
+      cache: KV-cache layout — "dense" (one worst-case ``(max_len,)`` row
+        per slot; the parity oracle), "paged" (page pool + block tables +
+        prefix sharing; see ``repro.serve.kv``), or a ``KVCacheSpec``.
+        Paged engines admit a request only when the page pool can cover
+        its worst case (prompt + max_new, minus shareable prefix pages),
+        map prefix-cache pages instead of re-prefilling shared prompt
+        prefixes, and free pages on completion (retaining them for
+        prefix reuse until the pool needs them back).
+      page_size / num_pages: paged-layout knobs (tokens per page; pool
+        size, default worst-case ``batch_slots * blocks_per_slot``).
       dist: optional ``repro.dist.Distribution`` — shards the decode cache
         (slots over the data axes, KV heads over "model") and the params
         by the path-based rules; the jitted engine step then partitions
@@ -178,17 +200,42 @@ class ContinuousBatcher:
         token_budget: Optional[int] = None,
         max_queue: Optional[int] = None,
         packed: bool = False,
+        cache: "str | KVCacheSpec" = "dense",
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
         dist=None,
     ):
         assert chunk_size >= 1
         assert token_budget is None or token_budget >= 1
         # fail at construction, not on the first step mid-trace
         require_chunkable(cfg, "ContinuousBatcher")
+        if isinstance(cache, KVCacheSpec):
+            spec = cache
+            # raised, not assert-ed: under python -O a mismatched spec
+            # would serve silently-wrong tokens (too-few block tables /
+            # scatter-dropped writes past the logical buffer)
+            if spec.num_slots != batch_slots or spec.max_len != max_len:
+                raise ValueError(
+                    f"KVCacheSpec(num_slots={spec.num_slots}, "
+                    f"max_len={spec.max_len}) disagrees with the engine's "
+                    f"batch_slots={batch_slots}, max_len={max_len}"
+                )
+        else:
+            spec = KVCacheSpec(
+                num_slots=batch_slots, max_len=max_len, layout=cache,
+                page_size=page_size, num_pages=num_pages,
+            )
         if packed and dist is not None:
-            raise NotImplementedError(
+            raise UnsupportedDistError(
                 "packed=True with a Distribution is not supported yet: the "
                 "per-token slot gather would cross the sharded slot axis "
                 "every step (the ROADMAP multi-host serving-mesh item)"
+            )
+        if spec.layout == "paged" and dist is not None:
+            raise UnsupportedDistError(
+                "cache='paged' with a Distribution is not supported yet: "
+                "the block-table page gather would cross the sharded page "
+                "pool every step (the ROADMAP multi-host serving-mesh item)"
             )
         self.packed = packed
         self.packed_capacity = (
@@ -205,21 +252,27 @@ class ContinuousBatcher:
         self.token_budget = token_budget
         self.max_queue = max_queue
         self.slots = [_Slot() for _ in range(batch_slots)]
-        build = functools.partial(
-            init_decode_cache, params, cfg, batch_slots, max_len, linear=True
-        )
-        if dist is None:
-            self.cache = build()
+        self.kv: Optional[KVCache] = None
+        if spec.layout == "paged":
+            self.kv = spec.build(params, cfg)
+            self.cache = self.kv.state
         else:
-            # materialize directly into the sharded layout — building the
-            # full cache on one device first would peak at the unsharded
-            # size, the very thing sharding is for
-            c_sh = dist.cache_shardings(jax.eval_shape(build))
-            self.cache = jax.jit(build, out_shardings=c_sh)()
+            build = functools.partial(
+                init_decode_cache, params, cfg, batch_slots, max_len, linear=True
+            )
+            if dist is None:
+                self.cache = build()
+            else:
+                # materialize directly into the sharded layout — building the
+                # full cache on one device first would peak at the unsharded
+                # size, the very thing sharding is for
+                c_sh = dist.cache_shardings(jax.eval_shape(build))
+                self.cache = jax.jit(build, out_shardings=c_sh)()
         self.queue: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self.steps = 0
         self.step_stats: List[StepStats] = []
+        self._shared_step = 0
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -228,14 +281,40 @@ class ContinuousBatcher:
             raise AdmissionError(
                 f"queue full ({len(self.queue)}/{self.max_queue}); retry later"
             )
+        if self.kv is not None and self.kv.tables is not None:
+            need = self.kv.tables.pages_required(
+                len(req.prompt), req.max_new_tokens
+            )
+            if need > self.kv.num_pages:
+                # admission is FIFO, so queueing an impossible request
+                # would livelock it and everything behind it
+                raise AdmissionError(
+                    f"request references {need} pages at worst case but "
+                    f"the pool has {self.kv.num_pages}; raise num_pages "
+                    f"or split the request"
+                )
         req.submitted_at = time.perf_counter()
         self.queue.append(req)
 
     def _admit(self):
-        for s in self.slots:
+        for i, s in enumerate(self.slots):
             if s.free and self.queue:
+                if self.kv is not None:
+                    head = self.queue[0]
+                    shared = self.kv.admit_slot(
+                        i, head.prompt, head.max_new_tokens
+                    )
+                    if shared is None:
+                        # the pool cannot guarantee the head request yet;
+                        # admission stays FIFO (no skip-ahead starvation)
+                        break
+                else:
+                    shared = 0
                 s.req = self.queue.pop(0)
-                s.pos = 0
+                # prompt tokens covered by shared prefix pages are already
+                # in the cache — skip straight past them
+                s.pos = shared
+                self._shared_step += shared
                 s.req.admitted_step = self.steps
 
     @property
@@ -314,7 +393,17 @@ class ContinuousBatcher:
     def step(self):
         """One engine iteration: mixed chunked-prefill + decode."""
         t0 = time.perf_counter()
+        self._shared_step = 0
         self._admit()
+        if self.kv is not None:
+            # lazy prefix sharing: an older request may have finished
+            # writing pages this prompt can map since the last step
+            for i, s in enumerate(self.slots):
+                if not s.free and s.prefilling:
+                    n_sh = self.kv.share(i, s.req.prompt, s.pos)
+                    if n_sh:
+                        s.pos += n_sh
+                        self._shared_step += n_sh
         n = self._schedule()
         decode_toks = prefill_toks = deferred = 0
         grants: List[packing.Grant] = []  # (slot, start pos, tokens)
@@ -335,7 +424,17 @@ class ContinuousBatcher:
                 decode_toks += 1
             grants.append((i, s.pos, toks))
 
+        if self.kv is not None:
+            # allocate (and copy-on-write, if any page is shared) every
+            # page this step's grants will scatter into, then hand the
+            # refreshed block tables to the jitted step
+            self.kv.prepare_step(grants)
+            self.cache = self.kv.state
+        used_pages = self.kv.used_pages if self.kv is not None else 0
+
         last_tok = self._run_packed(grants) if self.packed else self._run_dense(grants)
+        if self.kv is not None:
+            self.kv.state = self.cache
 
         now = time.perf_counter()
         for i, s in enumerate(self.slots):
@@ -344,6 +443,9 @@ class ContinuousBatcher:
             r = s.req
             was_prefilling = s.prefilling
             s.pos += n[i]
+            if self.kv is not None and was_prefilling:
+                # publish fully-written prompt pages for prefix sharing
+                self.kv.register_prompt_pages(i, r.prompt, s.pos)
             if was_prefilling and s.pos < len(r.prompt):
                 continue  # still mid-prompt; no token emitted this step
             r.output.append(last_tok[i])
@@ -354,9 +456,15 @@ class ContinuousBatcher:
                 r.finished_at = now
                 self.finished[r.uid] = r
                 s.req = None  # slot becomes available next step
+                if self.kv is not None:
+                    self.kv.free_slot(i)
 
         self.step_stats.append(
-            StepStats(self.steps, decode_toks, prefill_toks, deferred, now - t0)
+            StepStats(
+                self.steps, decode_toks, prefill_toks, deferred, now - t0,
+                shared_tokens=self._shared_step,
+                used_pages=used_pages,
+            )
         )
         self.steps += 1
 
@@ -384,7 +492,18 @@ class ContinuousBatcher:
         st = self.step_stats
         done = list(self.finished.values())
         ttfts = [r.ttft for r in done if r.ttft is not None]
+        paged = (
+            {
+                "shared_tokens": float(sum(s.shared_tokens for s in st)),
+                "peak_used_pages": float(max((s.used_pages for s in st), default=0)),
+                "touched_pages": float(self.kv.tables.touched_pages),
+                "num_pages": float(self.kv.num_pages),
+            }
+            if self.kv is not None
+            else {}
+        )
         return {
+            **paged,
             "steps": float(self.steps),
             "max_step_tokens": float(max((s.scheduled_tokens for s in st), default=0)),
             "mean_step_tokens": float(

@@ -48,3 +48,30 @@ def test_every_repro_module_imports():
     )
     assert out.returncode == 0, out.stderr[-3000:]
     assert f"OK {len(names)}" in out.stdout
+
+
+def test_launch_mesh_shim_warns_and_reexports():
+    """``repro.launch.mesh`` is a deprecated re-export of
+    ``repro.dist.mesh``: importing it must raise DeprecationWarning and
+    the shimmed symbols must be the same objects (in a subprocess — the
+    warning fires at first import only)."""
+    code = (
+        "import warnings\n"
+        "with warnings.catch_warnings(record=True) as w:\n"
+        "    warnings.simplefilter('always')\n"
+        "    import repro.launch.mesh as shim\n"
+        "assert any(issubclass(x.category, DeprecationWarning) for x in w), \\\n"
+        "    [str(x.message) for x in w]\n"
+        "import repro.dist.mesh as real\n"
+        "for name in shim.__all__:\n"
+        "    assert getattr(shim, name) is getattr(real, name), name\n"
+        "print('SHIM OK')\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=120,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHIM OK" in out.stdout

@@ -1,0 +1,508 @@
+"""Paged KV cache: allocator invariants, paged-vs-dense parity, prefix
+sharing, copy-on-write forks, and the typed dist error.
+
+The dense-slot engine is the oracle (same harness as
+``tests/test_serve_packed.py``): for every point on the parity matrix the
+paged engine must produce identical greedy output streams, TTFT step
+counts, and per-step accounting — paging changes *where bytes live*,
+never *what is computed*.  Prefix sharing is the exception that proves
+the rule: it skips recomputing KV that is bit-identical by construction,
+so outputs still match the oracle while prefill steps and page usage
+strictly drop.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig
+from repro.models.model import (
+    decode_step,
+    init_decode_cache,
+    init_params,
+    prefill_chunk,
+)
+from repro.serve import (
+    ContinuousBatcher,
+    KVCacheSpec,
+    KVState,
+    OutOfPages,
+    PagedTables,
+    Request,
+    UnsupportedDistError,
+)
+
+CFG = ModelConfig(
+    name="serve-paged-t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+    vocab_size=101, layer_pattern="LG", sliding_window=6, dtype="float32", remat=False,
+)
+
+# mixed prompt lengths through 2 slots: forces slot reuse and mixed
+# decode+prefill steps (same shapes the packed suite exercises)
+PROMPT_LENS = (3, 5, 12, 4, 8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def make_prompts(seed=0, lens=PROMPT_LENS):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab_size, size=n).tolist() for n in lens]
+
+
+def run_engine(params, prompts, max_new=4, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_len", 24)
+    eng = ContinuousBatcher(params, CFG, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=max_new))
+    eng.run()
+    return eng
+
+
+def assert_engines_match(oracle, eng):
+    assert {u: r.output for u, r in oracle.finished.items()} == {
+        u: r.output for u, r in eng.finished.items()
+    }
+    assert {u: r.ttft_steps for u, r in oracle.finished.items()} == {
+        u: r.ttft_steps for u, r in eng.finished.items()
+    }
+    assert oracle.steps == eng.steps
+    for sd, sp in zip(oracle.step_stats, eng.step_stats):
+        assert (sd.decode_tokens, sd.prefill_tokens, sd.deferred_tokens) == (
+            sp.decode_tokens, sp.prefill_tokens, sp.deferred_tokens
+        )
+
+
+# ---------------------------------------------------------------------------
+# Paged engine vs dense oracle
+# ---------------------------------------------------------------------------
+
+
+class TestPagedDenseParity:
+    @pytest.mark.parametrize("budget", [None, 4])
+    @pytest.mark.parametrize("packed", [False, True])
+    def test_parity_matrix(self, params, budget, packed):
+        """Disjoint prompts: scheduling, outputs, and accounting must be
+        byte-identical to the dense oracle (no sharing fires)."""
+        prompts = make_prompts()
+        dense = run_engine(params, prompts, chunk_size=16, token_budget=budget)
+        paged = run_engine(params, prompts, chunk_size=16, token_budget=budget,
+                           packed=packed, cache="paged", page_size=8)
+        assert_engines_match(dense, paged)
+        assert all(s.shared_tokens == 0 for s in paged.step_stats)
+        # pages are allocated for actual tokens, not worst case
+        assert paged.stats_summary()["peak_used_pages"] <= paged.kv.num_pages
+
+    @pytest.mark.parametrize("chunk", [4, 16])
+    def test_parity_small_pages(self, params, chunk):
+        """page_size < / == chunk_size, budget-constrained."""
+        prompts = make_prompts(seed=1)
+        dense = run_engine(params, prompts, chunk_size=chunk, token_budget=6)
+        paged = run_engine(params, prompts, chunk_size=chunk, token_budget=6,
+                           packed=True, cache="paged", page_size=4)
+        assert_engines_match(dense, paged)
+
+    def test_kvcachespec_accepted_directly(self, params):
+        spec = KVCacheSpec(num_slots=2, max_len=24, layout="paged", page_size=8)
+        eng = run_engine(params, make_prompts(seed=2, lens=(5, 9)), cache=spec)
+        assert eng.kv is not None and eng.kv.page_size == 8
+        assert sorted(eng.finished) == [0, 1]
+
+    def test_cache_bytes_accounting(self, params):
+        """Spec-level byte accounting matches the arrays it builds."""
+        spec = KVCacheSpec(num_slots=2, max_len=24, layout="paged", page_size=8)
+        kv = spec.build(params, CFG)
+        assert kv.memory_bytes() == spec.memory_bytes(CFG)
+        dspec = KVCacheSpec(num_slots=2, max_len=24, layout="dense")
+        dkv = dspec.build(params, CFG)
+        assert dkv.memory_bytes() == dspec.memory_bytes(CFG)
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing (the acceptance scenario: 256-token shared prefix)
+# ---------------------------------------------------------------------------
+
+
+class TestPrefixSharing:
+    def test_shared_prefix_fewer_pages_and_steps(self, params):
+        rng = np.random.default_rng(3)
+        prefix = rng.integers(0, CFG.vocab_size, size=256).tolist()
+        tails = [rng.integers(0, CFG.vocab_size, size=16).tolist() for _ in range(2)]
+        disjoint = [rng.integers(0, CFG.vocab_size, size=272).tolist() for _ in range(2)]
+        kw = dict(batch_slots=2, max_len=288, chunk_size=16)
+
+        def serve_two(eng, prompts):
+            for i, p in enumerate(prompts):
+                eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=4))
+                eng.run()  # sequential: the second request arrives after
+            return eng  # the first finished (its pages are prefix-cached)
+
+        shared = serve_two(
+            ContinuousBatcher(params, CFG, cache="paged", page_size=16, **kw),
+            [prefix + tails[0], prefix + tails[1]],
+        )
+        control = serve_two(
+            ContinuousBatcher(params, CFG, cache="paged", page_size=16, **kw),
+            disjoint,
+        )
+        oracle = serve_two(
+            ContinuousBatcher(params, CFG, **kw),
+            [prefix + tails[0], prefix + tails[1]],
+        )
+
+        # outputs identical to the dense oracle despite skipping 256
+        # prompt tokens of compute (shared-prefix KV is bit-identical)
+        assert {u: r.output for u, r in shared.finished.items()} == {
+            u: r.output for u, r in oracle.finished.items()
+        }
+        assert sum(s.shared_tokens for s in shared.step_stats) == 256
+        # strictly fewer page-pool rows than two disjoint requests...
+        assert shared.kv.tables.touched_pages < control.kv.tables.touched_pages
+        # ...and strictly fewer prefill steps for the second request
+        assert (
+            shared.finished[1].ttft_steps < control.finished[1].ttft_steps
+        )
+        assert shared.finished[1].ttft_steps < oracle.finished[1].ttft_steps
+        # first requests pay full price in both engines
+        assert shared.finished[0].ttft_steps == control.finished[0].ttft_steps
+
+    def test_sharing_caps_before_last_prompt_token(self, params):
+        """A prompt that is an exact page multiple of a cached prefix must
+        still process >= 1 token (its last-position logits seed decode)."""
+        rng = np.random.default_rng(4)
+        prefix = rng.integers(0, CFG.vocab_size, size=32).tolist()
+        eng = ContinuousBatcher(params, CFG, batch_slots=2, max_len=48,
+                                chunk_size=16, cache="paged", page_size=16)
+        eng.submit(Request(uid=0, prompt=list(prefix), max_new_tokens=2))
+        eng.run()
+        eng.submit(Request(uid=1, prompt=list(prefix), max_new_tokens=2))
+        eng.run()
+        # block 1 covers positions 16..31 = the prompt's end: not shareable
+        assert sum(s.shared_tokens for s in eng.step_stats) == 16
+        dense = ContinuousBatcher(params, CFG, batch_slots=2, max_len=48, chunk_size=16)
+        dense.submit(Request(uid=0, prompt=list(prefix), max_new_tokens=2))
+        dense.run()
+        assert eng.finished[1].output == dense.finished[0].output
+
+
+# ---------------------------------------------------------------------------
+# Fork + copy-on-write at the model level
+# ---------------------------------------------------------------------------
+
+
+class TestForkCow:
+    def test_fork_decode_matches_dense(self, params):
+        """Fork a slot mid-request, decode the two branches with different
+        tokens: COW must keep them isolated, logits matching a dense cache
+        that prefilled both slots independently."""
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(0, CFG.vocab_size, size=7).tolist()
+        spec = KVCacheSpec(num_slots=2, max_len=24, layout="paged", page_size=4)
+        kv = spec.build(params, CFG)
+        toks = np.zeros((2, 7), np.int32)
+        toks[0] = prompt
+        kv.prepare_step([(0, 0, prompt)])
+        _, kv.state = prefill_chunk(
+            params, CFG, kv.state, jnp.asarray(toks),
+            jnp.asarray([0, 0], jnp.int32), jnp.asarray([7, 0], jnp.int32))
+        kv.fork_slot(0, 1)
+        assert kv.tables.ref.count(2) == 2  # both prompt pages shared
+
+        dense = init_decode_cache(params, CFG, 2, 24, linear=True)
+        toks[1] = prompt
+        _, dense = prefill_chunk(
+            params, CFG, dense, jnp.asarray(toks),
+            jnp.asarray([0, 0], jnp.int32), jnp.asarray([7, 7], jnp.int32))
+
+        pos = [7, 7]
+        step_toks = np.asarray([[11], [93]], np.int32)  # branches diverge
+        for _ in range(3):
+            kv.prepare_step([(0, pos[0], [0]), (1, pos[1], [0])])
+            lg_p, kv.state = decode_step(
+                params, CFG, kv.state, jnp.asarray(step_toks),
+                jnp.asarray(pos, jnp.int32))
+            lg_d, dense = decode_step(
+                params, CFG, dense, jnp.asarray(step_toks),
+                jnp.asarray(pos, jnp.int32))
+            np.testing.assert_allclose(
+                np.asarray(lg_p), np.asarray(lg_d), atol=1e-5)
+            step_toks = np.asarray(jnp.argmax(lg_d[:, -1], axis=-1))[:, None].astype(np.int32)
+            pos = [p + 1 for p in pos]
+        # the written block was copied; untouched prefix page still shared
+        kv.tables.check_invariants()
+        assert kv.tables.ref.count(2) == 1
+
+
+# ---------------------------------------------------------------------------
+# Allocator invariants (deterministic + hypothesis)
+# ---------------------------------------------------------------------------
+
+
+class TestAllocator:
+    def test_cow_on_shared_block(self):
+        t = PagedTables(num_slots=2, num_blocks=4, num_pages=8, page_size=4)
+        assert t.admit(0, list(range(6)), 2) == 0
+        t.prepare_write(0, 0, 6)
+        t.fork(0, 1)
+        assert t.ref[t.tables[0][1]] == 2
+        ops = t.prepare_write(1, 6, 1)  # position 6 -> shared block 1
+        assert len(ops) == 1
+        src, dst = ops[0]
+        assert t.tables[0][1] == src and t.tables[1][1] == dst
+        assert t.ref[src] == 1 and t.ref[dst] == 1
+        t.check_invariants()
+
+    def test_refcount_zero_exactly_on_last_free(self):
+        t = PagedTables(num_slots=2, num_blocks=4, num_pages=8, page_size=4)
+        prompt = list(range(9))  # blocks 0,1 full + block 2 partial
+        t.admit(0, prompt, 1)
+        t.prepare_write(0, 0, 9)
+        t.register_prompt_pages(0, prompt, 9)
+        shared = t.admit(1, prompt, 1)
+        assert shared == 8  # two full pages shared (cap leaves pos 8)
+        page = t.tables[0][0]
+        assert t.ref[page] == 2
+        t.free_slot(0)
+        assert t.ref[page] == 1  # other sharer still holds it
+        t.free_slot(1)
+        assert t.ref[page] == 0
+        assert t.used_pages == 0
+        # registered pages are retained (cached), not recycled
+        assert t.cached_pages == 2 and t.free_pages == 6
+        t.check_invariants()
+
+    def test_admission_denied_then_freed(self):
+        t = PagedTables(num_slots=2, num_blocks=4, num_pages=4, page_size=4)
+        assert t.admit(0, list(range(10)), 4) == 0  # needs 4 blocks
+        assert t.admit(1, list(range(10)), 4) is None  # pool exhausted by reservation
+        t.prepare_write(0, 0, 10)
+        t.free_slot(0)
+        assert t.admit(1, list(range(10)), 4) == 0
+        t.check_invariants()
+
+    def test_eviction_reclaims_cached_pages(self):
+        t = PagedTables(num_slots=2, num_blocks=4, num_pages=4, page_size=4)
+        prompt = list(range(12))
+        t.admit(0, prompt, 4)
+        t.prepare_write(0, 0, 12)
+        t.register_prompt_pages(0, prompt, 12)
+        t.free_slot(0)
+        assert t.cached_pages == 3 and t.free_pages == 1
+        other = list(range(50, 62))
+        t.admit(1, other, 4)
+        t.prepare_write(1, 0, 12)  # 3 allocs: 1 free + 2 LRU evictions
+        assert t.free_pages == 0 and t.cached_pages == 1
+        t.check_invariants()
+
+    def test_impossible_request_raises_not_livelocks(self, params):
+        """A request whose worst case exceeds the whole pool must be
+        rejected loudly (FIFO admission would otherwise park it — and
+        everything queued behind it — forever)."""
+        from repro.serve import AdmissionError
+
+        eng = ContinuousBatcher(params, CFG, batch_slots=2, max_len=24,
+                                chunk_size=4, cache="paged", page_size=4,
+                                num_pages=3)  # plen 16 + 4 new needs 5 pages
+        with pytest.raises(AdmissionError, match="pages"):
+            eng.submit(Request(uid=0, prompt=list(range(16)), max_new_tokens=4))
+        t = PagedTables(num_slots=2, num_blocks=6, num_pages=3, page_size=4)
+        with pytest.raises(Exception, match="never fit"):
+            t.admit(0, list(range(16)), 4)
+
+    def test_spec_mismatch_raises_typed(self, params):
+        spec = KVCacheSpec(num_slots=4, max_len=48, layout="paged")
+        with pytest.raises(ValueError, match="disagrees"):
+            ContinuousBatcher(params, CFG, batch_slots=2, max_len=24, cache=spec)
+
+    def test_out_of_pages_on_unreserved_path(self):
+        t = PagedTables(num_slots=2, num_blocks=4, num_pages=2, page_size=4)
+        t.admit(0, list(range(5)), 3)
+        t.prepare_write(0, 0, 5)
+        t.fork(0, 1)  # unreserved
+        with pytest.raises(OutOfPages):
+            t.prepare_write(1, 5, 4)  # COW + new block with an empty pool
+        t.check_invariants()
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property sweep is extra depth, not the only coverage
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):  # keep the decorated defs importable
+        return lambda f: f
+
+    settings = given
+
+    class st:  # noqa: N801
+        @staticmethod
+        def _none(*a, **k):
+            return None
+
+        lists = tuples = integers = _none
+
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.integers(min_value=0, max_value=3),   # op: admit/write/finish/fork
+        st.integers(min_value=0, max_value=2),   # slot
+        st.integers(min_value=1, max_value=12),  # prompt len / write size
+        st.integers(min_value=1, max_value=4),   # max_new
+    ),
+    min_size=1, max_size=40,
+)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestAllocatorProperties:
+    @settings(max_examples=60, deadline=None)
+    @given(ops_strategy, st.integers(min_value=0, max_value=2**31 - 1))
+    def test_no_leak_no_double_free(self, ops, seed):
+        """Arbitrary admit / write+register / finish / fork sequences:
+        pages are conserved, refcounts equal table occurrences (zero
+        exactly when the last sharer frees), nothing double-frees."""
+        rng = np.random.default_rng(seed)
+        t = PagedTables(num_slots=3, num_blocks=4, num_pages=20, page_size=4)
+        live = {}  # slot -> (prompt, pos, limit)
+        for op, slot, a, b in ops:
+            if op == 0 and slot not in live and not t.tables[slot]:
+                prompt = rng.integers(0, 97, size=a).tolist()
+                shared = t.admit(slot, prompt, b)
+                if shared is not None:
+                    live[slot] = [prompt, shared, a + b]
+            elif op == 1 and slot in live:
+                prompt, pos, limit = live[slot]
+                n = min(a, limit - pos)
+                if n > 0:
+                    try:
+                        t.prepare_write(slot, pos, n)
+                    except OutOfPages:
+                        pass  # fork-driven overcommit; invariants must hold
+                    else:
+                        live[slot][1] = pos + n
+                        t.register_prompt_pages(slot, prompt, pos + n)
+            elif op == 2 and slot in live:
+                t.free_slot(slot)
+                del live[slot]
+            elif op == 3 and slot in live:
+                child = next(
+                    (c for c in range(3) if c not in live and not t.tables[c]),
+                    None,
+                )
+                if child is not None:
+                    t.fork(slot, child)
+                    live[child] = [list(live[slot][0]), live[slot][1], live[slot][2]]
+            t.check_invariants()
+        for slot in list(live):
+            t.free_slot(slot)
+        t.check_invariants()
+        assert t.used_pages == 0
+        assert all(r == 0 for r in t.ref)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.integers(min_value=1, max_value=30), min_size=1, max_size=6),
+           st.integers(min_value=1, max_value=8))
+    def test_device_tables_consistent(self, lens, ps):
+        """The dense device view always mirrors the host tables, sentinel
+        included."""
+        nb = -(-max(lens) // ps)
+        t = PagedTables(num_slots=len(lens), num_blocks=nb,
+                        num_pages=len(lens) * nb, page_size=ps)
+        for s, n in enumerate(lens):
+            assert t.admit(s, list(range(n)), 0) == 0
+            t.prepare_write(s, 0, n)
+        arr = t.device_tables()
+        for s, n in enumerate(lens):
+            k = -(-n // ps)
+            assert list(arr[s, :k]) == t.tables[s]
+            assert all(arr[s, k:] == t.num_pages)
+        t.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Distribution interplay
+# ---------------------------------------------------------------------------
+
+
+class TestDistInterplay:
+    def _dist(self):
+        from repro.dist import Distribution
+
+        return Distribution.from_spec("1")
+
+    def test_packed_dist_typed_error(self, params):
+        with pytest.raises(UnsupportedDistError, match="ROADMAP"):
+            ContinuousBatcher(params, CFG, batch_slots=2, max_len=24,
+                              packed=True, dist=self._dist())
+        # the typed error still satisfies pre-existing handlers
+        with pytest.raises(NotImplementedError):
+            ContinuousBatcher(params, CFG, batch_slots=2, max_len=24,
+                              packed=True, dist=self._dist())
+
+    def test_paged_dist_typed_error(self, params):
+        with pytest.raises(UnsupportedDistError, match="ROADMAP"):
+            ContinuousBatcher(params, CFG, batch_slots=2, max_len=24,
+                              cache="paged", dist=self._dist())
+
+    def test_cache_shardings_learn_paged_pytree(self, params):
+        from jax.sharding import NamedSharding
+
+        from repro.dist.sharding import cache_shardings
+        from repro.dist.mesh import make_mesh
+
+        mesh = make_mesh((1, 1), ("data", "model"))
+        spec = KVCacheSpec(num_slots=2, max_len=24, layout="paged", page_size=8)
+        kv = spec.build(params, CFG)
+        sh = cache_shardings(kv.state, mesh)
+        assert isinstance(sh, KVState) and sh.page_size == kv.state.page_size
+        assert isinstance(sh.tables, NamedSharding)
+        assert not sh.tables.spec  # block tables replicated
+        leaves = jax.tree_util.tree_leaves(
+            sh.data, is_leaf=lambda x: isinstance(x, NamedSharding)
+        )
+        assert leaves and all(isinstance(x, NamedSharding) for x in leaves)
+        # structure congruence: usable as jit shardings for the state
+        jax.tree.map(lambda a, b: None, kv.state.data, sh.data)
+
+
+# ---------------------------------------------------------------------------
+# Slow lane: undersized-pool soak
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+class TestPagedSoak:
+    def test_soak_oversubscribed_pool(self, params):
+        """64 staggered requests through a pool half the worst case:
+        admission gates on reservations, everything finishes, no page
+        leaks, the pool bound is honored every step."""
+        rng = np.random.default_rng(7)
+        eng = ContinuousBatcher(
+            params, CFG, batch_slots=8, max_len=64, chunk_size=16,
+            token_budget=12, packed=True, cache="paged", page_size=16,
+            num_pages=16,  # worst case would be 8 slots * 4 blocks = 32
+        )
+        pending = [
+            Request(uid=i, prompt=rng.integers(0, CFG.vocab_size, size=n).tolist(),
+                    max_new_tokens=8)
+            for i, n in enumerate(rng.integers(4, 40, size=64))
+        ]
+        while pending or eng.busy:
+            for _ in range(3):
+                if pending:
+                    eng.submit(pending.pop(0))
+            for _ in range(4):
+                if eng.busy:
+                    eng.step()
+            eng.kv.tables.check_invariants()
+        assert sorted(eng.finished) == list(range(64))
+        assert all(len(r.output) == 8 for r in eng.finished.values())
+        assert all(s.used_pages <= 16 for s in eng.step_stats)
+        assert eng.kv.used_pages == 0  # every page came back
