@@ -23,6 +23,14 @@ paged rows add cache-byte and page-usage accounting, plus a
 prefix-sharing record (second request with a shared 256-token prefix:
 fewer prefill steps, fewer pool pages).
 
+``--spec`` adds the speculative-decoding rows: a "spec" engine (paged +
+packed + n-gram proposer) joins the per-budget A/B — outputs must stay
+token-identical to the dense oracle, acceptance does the quality control
+— and a dedicated repetitive-prompt record pins the decode-side win:
+greedy decode of self-repeating streams is n-gram territory, so the spec
+engine must take >= 1.5x fewer engine steps per generated token than the
+same engine without speculation.
+
 ``--json PATH`` additionally writes every row as a machine-readable perf
 record (the CI full lane emits ``BENCH_serve.json``), so the repo keeps a
 benchmark trajectory across PRs.
@@ -36,14 +44,21 @@ import numpy as np
 
 from repro.models import ModelConfig
 from repro.models.model import init_params
-from repro.serve import ContinuousBatcher, Request
+from repro.serve import ContinuousBatcher, NGramProposer, Request, SpecConfig
+
+SPEC_K = 4
 
 #: engine kwargs per A/B mode; paged rides the packed step program (the
-#: two compose) so its delta against "packed" isolates the page tables
+#: two compose) so its delta against "packed" isolates the page tables,
+#: and "spec" rides paged so its delta isolates the propose/verify loop.
+#: Values are factories: the spec proposer keeps per-slot state, so every
+#: engine needs a fresh one.
 MODES = {
-    "dense": {},
-    "packed": {"packed": True},
-    "paged": {"packed": True, "cache": "paged", "page_size": 16},
+    "dense": lambda: {},
+    "packed": lambda: {"packed": True},
+    "paged": lambda: {"packed": True, "cache": "paged", "page_size": 16},
+    "spec": lambda: {"packed": True, "cache": "paged", "page_size": 16,
+                     "spec": SpecConfig(NGramProposer(), k=SPEC_K)},
 }
 
 
@@ -120,11 +135,14 @@ def mixed_trace(args, vocab, seed=1):
 
 
 def bench_modes_ab(params, cfg, args):
-    """Dense vs packed vs paged A/B on the same trace per budget.
-    Returns the machine-readable rows for ``--json``."""
+    """Dense vs packed vs paged (vs spec) A/B on the same trace per
+    budget.  Returns the machine-readable rows for ``--json``."""
     budgets = [b or None for b in args.budgets]
     if 4 not in budgets:
         budgets = [4] + budgets  # the acceptance point: budget=4
+    modes = dict(MODES) if args.spec else {
+        m: f for m, f in MODES.items() if m != "spec"
+    }
 
     hdr = f"{'budget':>7} {'mode':>7} {'granted/step':>13} {'mixed-step ms':>14} " \
           f"{'decode-step ms':>15} {'TTFT ms':>8} {'tok/s':>8} {'cache MiB':>10} {'outputs':>8}"
@@ -132,12 +150,12 @@ def bench_modes_ab(params, cfg, args):
     print("-" * len(hdr))
     rows, records = {}, []
     for budget in budgets:
-        for mode, mode_kw in MODES.items():
+        for mode, mode_kw_fn in modes.items():
             def build():
                 return ContinuousBatcher(
                     params, cfg, batch_slots=args.batch,
                     max_len=args.prompt_len + args.new_tokens,
-                    chunk_size=16, token_budget=budget, **mode_kw,
+                    chunk_size=16, token_budget=budget, **mode_kw_fn(),
                 )
 
             run_once(build(), mixed_trace(args, cfg.vocab_size, seed=7))  # warmup
@@ -159,13 +177,20 @@ def bench_modes_ab(params, cfg, args):
                 "mixed_ms": mixed_ms,
                 "outputs": {u: r.output for u, r in done.items()},
             }
+            spec_stats = (
+                {"acceptance_rate": summ["acceptance_rate"],
+                 "draft_tokens": summ["draft_tokens"]}
+                if mode == "spec" else {}
+            )
             records.append({
                 "mode": mode, "budget": budget, "granted_per_step": granted,
                 "mixed_step_ms": mixed_ms, "decode_step_ms": decode_ms,
                 "mean_ttft_ms": summ["mean_ttft"] * 1e3,
                 "p99_ttft_ms": summ["p99_ttft"] * 1e3,
                 "tokens_per_s": n_tok / total, "total_s": total,
-                "steps": eng.steps, **cstats,
+                "steps": eng.steps,
+                "steps_per_token": summ["steps_per_token"],
+                **spec_stats, **cstats,
             })
             if mode == "dense":
                 verdict = "oracle"
@@ -179,7 +204,9 @@ def bench_modes_ab(params, cfg, args):
                   f"{cstats['cache_bytes'] / 2**20:>10.2f} {verdict:>8}")
 
     for b in budgets:
-        for mode in ("packed", "paged"):
+        for mode in modes:
+            if mode == "dense":
+                continue
             if rows[(b, mode)]["outputs"] != rows[(b, "dense")]["outputs"]:
                 raise SystemExit(
                     f"FAIL: {mode} outputs diverged from the dense oracle "
@@ -257,6 +284,59 @@ def bench_prefix_sharing(params, cfg, args):
     return rec
 
 
+def bench_speculative(params, cfg, args):
+    """Speculative-decoding record: repetitive prompts (and the
+    self-repeating greedy streams they induce) through the paged engine
+    with and without the n-gram proposer.  Outputs must be identical; the
+    spec engine must take >= 1.5x fewer engine steps per generated
+    token."""
+    rng = np.random.default_rng(13)
+    pattern = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    plen = min(args.prompt_len, 64)
+    new_tokens = max(args.new_tokens, 48)  # decode-heavy: spec territory
+    prompts = []
+    for i in range(args.batch):
+        rot = pattern[i % len(pattern):] + pattern[: i % len(pattern)]
+        prompts.append((rot * ((plen + 7) // 8))[:plen])
+
+    def serve(spec):
+        eng = ContinuousBatcher(
+            params, cfg, batch_slots=args.batch, max_len=plen + new_tokens,
+            chunk_size=16, packed=True, cache="paged", page_size=16,
+            spec=SpecConfig(NGramProposer(), k=SPEC_K) if spec else None,
+        )
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=new_tokens))
+        eng.run()
+        return eng
+
+    base, spec = serve(False), serve(True)
+    if {u: r.output for u, r in base.finished.items()} != \
+            {u: r.output for u, r in spec.finished.items()}:
+        raise SystemExit("FAIL: speculative outputs diverged from greedy")
+    bs, ss = base.stats_summary(), spec.stats_summary()
+    rec = {
+        "proposer": "ngram", "k": SPEC_K,
+        "prompt_len": plen, "new_tokens": new_tokens,
+        "acceptance_rate": ss["acceptance_rate"],
+        "steps_per_token": {"greedy": bs["steps_per_token"],
+                            "spec": ss["steps_per_token"]},
+        "engine_steps": {"greedy": base.steps, "spec": spec.steps},
+        "step_reduction": bs["steps_per_token"] / ss["steps_per_token"],
+    }
+    print(f"\nspeculative (n-gram, k={SPEC_K}, repetitive prompts): "
+          f"{rec['steps_per_token']['greedy']:.2f} -> "
+          f"{rec['steps_per_token']['spec']:.2f} steps/token "
+          f"({rec['step_reduction']:.2f}x fewer), acceptance "
+          f"{rec['acceptance_rate']:.2f}")
+    if rec["step_reduction"] < 1.5:
+        raise SystemExit(
+            f"FAIL: expected >= 1.5x fewer engine steps per token with the "
+            f"n-gram proposer, got {rec['step_reduction']:.2f}x"
+        )
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8)
@@ -270,6 +350,10 @@ def main():
     ap.add_argument("--packed", action="store_true",
                     help="dense/packed/paged A/B: step wall must scale with "
                          "granted tokens; includes the prefix-sharing record")
+    ap.add_argument("--spec", action="store_true",
+                    help="with --packed: add the speculative rows (n-gram "
+                         "proposer) and the repetitive-prompt steps-per-"
+                         "token record (asserts >= 1.5x fewer steps/token)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable perf records (e.g. "
                          "BENCH_serve.json; the CI full lane does)")
@@ -302,7 +386,10 @@ def main():
     if args.packed:
         records = bench_modes_ab(params, cfg, args)
         prefix_rec = bench_prefix_sharing(params, cfg, args)
-        dump({"rows": records, "prefix_sharing": prefix_rec})
+        payload = {"rows": records, "prefix_sharing": prefix_rec}
+        if args.spec:
+            payload["speculative"] = bench_speculative(params, cfg, args)
+        dump(payload)
         return
 
     base = bench(params, cfg, args, chunk=1, budget=None)

@@ -19,7 +19,13 @@ import numpy as np
 
 from repro.models import ModelConfig
 from repro.models.model import init_params
-from repro.serve import ContinuousBatcher, Request
+from repro.serve import (
+    ContinuousBatcher,
+    DraftModelProposer,
+    NGramProposer,
+    Request,
+    SpecConfig,
+)
 
 
 def main():
@@ -48,6 +54,14 @@ def main():
                          "count, or budget-staggered) — slots prefilling "
                          "the same prefix in lockstep each write their "
                          "own copy")
+    ap.add_argument("--spec", default="off", choices=["off", "ngram", "draft"],
+                    help="speculative decoding: 'ngram' proposes from each "
+                         "request's own token history (prompt-lookup), "
+                         "'draft' runs a smaller draft model ahead; the "
+                         "target verifies k tokens per decode step and "
+                         "output stays token-identical to plain greedy")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens verified per decode slot per step")
     ap.add_argument("--arch", default="",
                     help="optional smoke-config name (e.g. mixtral-8x22b)")
     args = ap.parse_args()
@@ -65,12 +79,28 @@ def main():
 
     params = init_params(jax.random.PRNGKey(0), cfg)
     max_len = args.prompt_len + args.new_tokens
+    spec = None
+    if args.spec == "ngram":
+        spec = SpecConfig(NGramProposer(), k=args.spec_k)
+    elif args.spec == "draft":
+        # demo draft: a half-width model (random weights, so expect low
+        # acceptance — a real deployment distills or shrinks the target)
+        dcfg = ModelConfig(name="serve-draft", n_layers=2, d_model=64,
+                           n_heads=4, n_kv_heads=2, d_ff=128,
+                           vocab_size=cfg.vocab_size, sliding_window=64,
+                           layer_pattern="LG", dtype="float32", remat=False)
+        dparams = init_params(jax.random.PRNGKey(1), dcfg)
+        spec = SpecConfig(
+            DraftModelProposer(dparams, dcfg, args.batch, max_len),
+            k=args.spec_k,
+        )
     eng = ContinuousBatcher(
         params, cfg, batch_slots=args.batch, max_len=max_len,
         chunk_size=args.chunk_size,
         token_budget=args.token_budget or None,
         packed=args.packed,
         cache=args.cache, page_size=args.page_size,
+        spec=spec,
     )
 
     rng = np.random.default_rng(1)
@@ -103,6 +133,11 @@ def main():
               f"peak pages used ({args.page_size} tokens each), "
               f"{s['shared_tokens']:.0f} prompt tokens served from "
               f"prefix-shared pages")
+    if eng.spec is not None:
+        print(f"  speculative ({args.spec}, k={args.spec_k}): "
+              f"{s['draft_tokens']:.0f} drafts verified, acceptance "
+              f"{s['acceptance_rate']:.2f}, "
+              f"{s['steps_per_token']:.2f} engine steps per generated token")
     r0 = done[0]
     print("sample continuation:", r0.output[:12])
 

@@ -358,6 +358,39 @@ def prefill_chunk(
     return logits, _cache_rebuild(cache, {"stack": new_stack})
 
 
+def verify_step(
+    params: PyTree,
+    cfg: ModelConfig,
+    cache: PyTree,
+    tokens: jnp.ndarray,  # (B, 1 + k) int32: [last emitted, draft_1..draft_k]
+    pos: jnp.ndarray,  # (B,) first absolute position per slot
+    seq_lens: jnp.ndarray,  # (B,) 1 + drafts granted per slot (0 = idle)
+    moe_impl: str = "dense",
+) -> Tuple[jnp.ndarray, PyTree]:
+    """Speculative-decoding verify path: score ``k`` draft tokens per slot
+    in one bounded step, returning **per-position** logits.
+
+    Row i carries ``[t_last, d_1, .., d_k]`` at the slot's absolute
+    positions; column ``j`` of the returned ``(B, 1 + k, V)`` logits is
+    the model's next-token distribution after consuming the row through
+    column ``j`` — so greedy acceptance keeps the longest prefix where
+    ``d_{j+1} == argmax(logits[:, j])`` and the first mismatching column
+    supplies the bonus token.  This *is* ``prefill_chunk``: verification
+    is chunked prefill at the slot's absolute positions (the same
+    shape-stable compiled program family as mixed prefill+decode steps),
+    which means the drafts' KV lands in the cache as a side effect and
+    the accepted prefix needs no recompute.  Rejected positions are the
+    caller's rollback: a position-mask trim for dense slots (stale rows
+    are never attended) or ``KVCache.trim_slot`` for the paged layout.
+
+    The serving engine's jitted step IS this program (one compiled step
+    serves prefill, decode, and verify grants alike); this named entry
+    point is the contract for direct callers and is pinned against a
+    sequential ``decode_step`` loop in ``tests/test_serve_spec.py``.
+    """
+    return prefill_chunk(params, cfg, cache, tokens, pos, seq_lens, moe_impl=moe_impl)
+
+
 def packed_prefill(
     params: PyTree,
     cfg: ModelConfig,

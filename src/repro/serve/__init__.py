@@ -2,9 +2,18 @@ from ..models.model import UnsupportedPatternError
 from .block_table import OutOfPages, PagedTables, PageError
 from .kv import DenseSlots, KVCache, KVCacheSpec, KVState, Paged
 from .packing import PackedLayout, pack_step, packed_capacity
+from .spec import (
+    DraftModelProposer,
+    NGramProposer,
+    Proposer,
+    SpecConfig,
+    accept_greedy,
+)
 from .scheduler import (
     AdmissionError,
     ContinuousBatcher,
+    EngineStateError,
+    InvalidRequestError,
     Request,
     StepStats,
     UnsupportedDistError,
@@ -14,18 +23,25 @@ __all__ = [
     "AdmissionError",
     "ContinuousBatcher",
     "DenseSlots",
+    "DraftModelProposer",
+    "EngineStateError",
+    "InvalidRequestError",
     "KVCache",
     "KVCacheSpec",
     "KVState",
+    "NGramProposer",
     "OutOfPages",
     "PackedLayout",
     "Paged",
     "PagedTables",
     "PageError",
+    "Proposer",
     "Request",
+    "SpecConfig",
     "StepStats",
     "UnsupportedDistError",
     "UnsupportedPatternError",
+    "accept_greedy",
     "pack_step",
     "packed_capacity",
 ]

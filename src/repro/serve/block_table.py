@@ -210,6 +210,22 @@ class PagedTables:
             self._map_page(slot, page, consume_reservation=False)
         return len(shared) * self.page_size
 
+    def probe_shareable(self, prompt: Sequence[int]) -> int:
+        """Prompt tokens the prefix cache could supply for ``prompt`` right
+        now, without touching any slot state.  Admission uses it to dedup
+        *in-flight* prefixes: when an active slot is still prefilling a
+        prompt that will publish more shareable pages than this, the new
+        request is worth parking until those pages land."""
+        ps = self.page_size
+        last = (len(prompt) - 1) // ps  # first non-shareable block
+        parent, n = ROOT_KEY, 0
+        for b in range(last):
+            kid = self._key_ids.get((parent, tuple(prompt[b * ps : (b + 1) * ps])))
+            if kid is None or kid not in self._prefix:
+                break
+            parent, n = kid, n + 1
+        return n * ps
+
     def try_share(self, slot: int, prompt: Sequence[int], pos: int) -> int:
         """Map any prefix-cache pages covering ``prompt`` from ``pos`` on
         (mid-prefill sharing: an older request may have finished writing
@@ -301,6 +317,26 @@ class PagedTables:
         self.tables[slot] = []
         self._reserved[slot] = 0
         self._chain[slot] = []
+
+    def trim(self, slot: int, n_tokens: int) -> int:
+        """Drop every block of ``slot`` wholly past ``n_tokens`` kept
+        positions — the paged half of speculative-decoding rollback
+        (rejected draft tokens wrote KV into blocks the sequence no longer
+        reaches).  The block holding the last kept token stays; dropped
+        pages are decref'd (shared pages survive with their other owners,
+        prefix-registered pages move to the reclaimable tier) and restored
+        to the slot's reservation so availability accounting still covers
+        its admitted worst case.  Returns the number of blocks dropped."""
+        keep = self.blocks_for(n_tokens)
+        table = self.tables[slot]
+        if keep >= len(table):
+            return 0
+        dropped = table[keep:]
+        del table[keep:]
+        for page in dropped:
+            self._decref(page)
+        self._reserved[slot] += len(dropped)
+        return len(dropped)
 
     def fork(self, parent: int, child: int) -> None:
         """Share every page of ``parent`` with ``child`` (beam-style fork).

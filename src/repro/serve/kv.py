@@ -313,6 +313,14 @@ class KVCache:
             self.sync()
         return shared
 
+    def probe_shared(self, prompt) -> int:
+        """Prompt tokens the prefix cache could supply right now, without
+        mutating anything (the admission-time in-flight dedup probe).
+        Dense: nothing is ever shared."""
+        if self.tables is None:
+            return 0
+        return self.tables.probe_shareable(prompt)
+
     def share(self, slot: int, prompt, pos: int) -> int:
         if self.tables is None:
             return 0
@@ -339,6 +347,19 @@ class KVCache:
     def register_prompt_pages(self, slot: int, prompt, upto: int) -> None:
         if self.tables is not None:
             self.tables.register_prompt_pages(slot, prompt, upto)
+
+    def trim_slot(self, slot: int, keep_tokens: int) -> int:
+        """Roll back ``slot`` to ``keep_tokens`` positions: drop the blocks
+        past the kept length (speculative-decoding rollback of rejected
+        draft KV).  Dense layout: a no-op — stale rows past the position
+        cursor are never attended (position-mask trim is free).  Returns
+        blocks dropped."""
+        if self.tables is None:
+            return 0
+        n = self.tables.trim(slot, keep_tokens)
+        if n:
+            self.sync()
+        return n
 
     def free_slot(self, slot: int) -> None:
         if self.tables is not None:

@@ -51,23 +51,31 @@ class PackedLayout:
     #: diagnostic/telemetry only; the model path derives segment
     #: isolation from slot_ids alone (per-token slot gather)
     segment_starts: np.ndarray
-    last_index: Dict[int, int]  # slot -> packed index of its final token
+    #: slot -> (first packed index, token count) of its grant — the
+    #: speculative verifier reads every granted column; a plain decode
+    #: consumer reads the span's last (``start + count - 1``)
+    spans: Dict[int, Tuple[int, int]]
     n_tokens: int
     capacity: int
 
 
-def packed_capacity(batch_slots: int, chunk_size: int, token_budget) -> int:
+def packed_capacity(batch_slots: int, chunk_size: int, token_budget,
+                    draft_k: int = 0) -> int:
     """Compiled packed-program length for an engine configuration.
 
     The scheduler can exceed ``token_budget`` in exactly two ways: decode
     slots are unconditional (up to ``batch_slots`` tokens even when the
     budget is smaller) and the starvation guard grants one extra prefill
     token when decodes alone exhaust the budget — hence
-    ``max(batch_slots, token_budget) + 1``.  With no budget every
-    prefilling slot may take a full chunk: ``batch_slots * chunk_size``.
+    ``max(batch_slots, token_budget) + 1``.  Speculative draft tokens
+    (``draft_k`` per decode slot) are *not* unconditional — they compete
+    under the budget like prefill chunks — so they leave the budgeted
+    bound unchanged.  With no budget every prefilling slot may take a
+    full chunk and every decode slot a full verify window:
+    ``batch_slots * max(chunk_size, draft_k + 1)``.
     """
     if token_budget is None:
-        return batch_slots * chunk_size
+        return batch_slots * max(chunk_size, draft_k + 1)
     return max(batch_slots, token_budget) + 1
 
 
@@ -89,7 +97,7 @@ def pack_step(grants: Sequence[Grant], capacity: int) -> PackedLayout:
     slot_ids = np.full((capacity,), PAD_SLOT, np.int32)
     positions = np.zeros((capacity,), np.int32)
     starts: List[int] = [0]
-    last_index: Dict[int, int] = {}
+    spans: Dict[int, Tuple[int, int]] = {}
     cursor = 0
     for slot, pos0, toks in grants:
         m = len(toks)
@@ -98,15 +106,15 @@ def pack_step(grants: Sequence[Grant], capacity: int) -> PackedLayout:
         tokens[cursor : cursor + m] = toks
         slot_ids[cursor : cursor + m] = slot
         positions[cursor : cursor + m] = np.arange(pos0, pos0 + m)
+        spans[slot] = (cursor, m)
         cursor += m
         starts.append(cursor)
-        last_index[slot] = cursor - 1
     return PackedLayout(
         tokens=tokens,
         slot_ids=slot_ids,
         positions=positions,
         segment_starts=np.asarray(starts, np.int32),
-        last_index=last_index,
+        spans=spans,
         n_tokens=total,
         capacity=capacity,
     )

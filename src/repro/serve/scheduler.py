@@ -26,7 +26,10 @@ Shape stability: the dense mode compiles at most two programs per
 session — a (B, chunk_size) mixed step and a (B, 1) decode-only step —
 because the budget only changes the *contents* of the per-slot length
 vector, never tensor shapes.  The packed mode compiles exactly one, at
-the packed capacity (``packing.packed_capacity``).
+the packed capacity (``packing.packed_capacity``).  Speculative decoding
+(``spec=``) keeps the two-program story: decode steps widen to
+(B, k + 1) verify grants and the mixed width becomes
+``max(chunk_size, k + 1)`` — still fixed per engine configuration.
 
 A consequence worth being precise about: per-step wall time is bounded
 by the fixed cost of those two compiled programs, and the budget bounds
@@ -62,6 +65,7 @@ from ..models.model import (
 )
 from . import packing
 from .kv import KVCache, KVCacheSpec
+from .spec import Proposer, SpecConfig, accept_greedy
 
 PyTree = object
 
@@ -92,12 +96,33 @@ class AdmissionError(RuntimeError):
     """Raised by ``submit`` when the engine's wait queue is full."""
 
 
+class InvalidRequestError(ValueError):
+    """A request the engine can never serve correctly.
+
+    Raised (never ``assert``-ed — asserts vanish under ``python -O``, and
+    an admitted over-long request's out-of-range scatter writes are
+    silently dropped, i.e. wrong tokens served) for: prompts longer than
+    the slot can hold, empty prompts (decode would index
+    ``prompt[-1]`` mid-step), and ``max_new_tokens < 1``.
+    """
+
+
+class EngineStateError(RuntimeError):
+    """An engine lifecycle operation was called in the wrong state (e.g.
+    ``reset_stats`` while requests are still in flight).  Raised, not
+    ``assert``-ed, so the guard survives ``python -O``."""
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
     prompt: List[int]
     max_new_tokens: int
     output: List[int] = dataclasses.field(default_factory=list)
+    #: the engine finished this request short of ``max_new_tokens``
+    #: (its slot ran out of cache positions) — surfaced instead of
+    #: silently serving a truncated stream
+    truncated: bool = False
     # --- latency accounting (filled in by the engine) ---
     submitted_at: Optional[float] = None
     first_token_at: Optional[float] = None
@@ -129,16 +154,18 @@ class StepStats:
     """Per-iteration scheduling record (compute accounting for the budget)."""
 
     step: int
-    decode_tokens: int  # decode slots fed (1 token each)
+    decode_tokens: int  # decode slots fed (1 baseline token each)
     prefill_tokens: int  # prompt tokens consumed this step
     deferred_tokens: int  # prompt tokens pushed past the deadline
     wall_time: float  # host-measured step duration (seconds)
     shared_tokens: int = 0  # prompt tokens covered by prefix-cache pages
     used_pages: int = 0  # paged layout: pages referenced after this step
+    draft_tokens: int = 0  # speculative draft tokens verified this step
+    accepted_tokens: int = 0  # drafts the target model accepted
 
     @property
     def scheduled_tokens(self) -> int:
-        return self.decode_tokens + self.prefill_tokens
+        return self.decode_tokens + self.draft_tokens + self.prefill_tokens
 
 
 @dataclasses.dataclass
@@ -184,6 +211,19 @@ class ContinuousBatcher:
         prefix reuse until the pool needs them back).
       page_size / num_pages: paged-layout knobs (tokens per page; pool
         size, default worst-case ``batch_slots * blocks_per_slot``).
+      spec: speculative decoding — a ``repro.serve.spec.SpecConfig`` (or a
+        bare ``Proposer``, wrapped with the default ``k``).  Decode slots
+        then verify up to ``k`` proposed tokens per step in one chunked
+        verify grant (chunked prefill at the slot's absolute positions —
+        the contract ``models.model.verify_step`` documents; the engine's
+        one jitted step program serves prefill, decode, and verify
+        grants alike), keep the longest greedy-matching
+        prefix plus a bonus token, and roll rejected KV back
+        (position-mask trim for dense, ``KVCache.trim_slot`` for paged).
+        Draft tokens are scheduled under ``token_budget`` with lower
+        priority than decode baselines and higher than prefill chunks.
+        Output streams are token-identical to the non-speculative greedy
+        engine by construction.
       dist: optional ``repro.dist.Distribution`` — shards the decode cache
         (slots over the data axes, KV heads over "model") and the params
         by the path-based rules; the jitted engine step then partitions
@@ -203,25 +243,33 @@ class ContinuousBatcher:
         cache: "str | KVCacheSpec" = "dense",
         page_size: int = 16,
         num_pages: Optional[int] = None,
+        spec: "Optional[SpecConfig | Proposer]" = None,
         dist=None,
     ):
-        assert chunk_size >= 1
-        assert token_budget is None or token_budget >= 1
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got {token_budget}")
+        if isinstance(spec, Proposer):
+            spec = SpecConfig(proposer=spec)
+        self.spec = spec
+        if spec is not None:
+            spec.proposer.bind_engine(batch_slots, max_len)
         # fail at construction, not on the first step mid-trace
         require_chunkable(cfg, "ContinuousBatcher")
         if isinstance(cache, KVCacheSpec):
-            spec = cache
+            kv_spec = cache
             # raised, not assert-ed: under python -O a mismatched spec
             # would serve silently-wrong tokens (too-few block tables /
             # scatter-dropped writes past the logical buffer)
-            if spec.num_slots != batch_slots or spec.max_len != max_len:
+            if kv_spec.num_slots != batch_slots or kv_spec.max_len != max_len:
                 raise ValueError(
-                    f"KVCacheSpec(num_slots={spec.num_slots}, "
-                    f"max_len={spec.max_len}) disagrees with the engine's "
+                    f"KVCacheSpec(num_slots={kv_spec.num_slots}, "
+                    f"max_len={kv_spec.max_len}) disagrees with the engine's "
                     f"batch_slots={batch_slots}, max_len={max_len}"
                 )
         else:
-            spec = KVCacheSpec(
+            kv_spec = KVCacheSpec(
                 num_slots=batch_slots, max_len=max_len, layout=cache,
                 page_size=page_size, num_pages=num_pages,
             )
@@ -231,7 +279,7 @@ class ContinuousBatcher:
                 "per-token slot gather would cross the sharded slot axis "
                 "every step (the ROADMAP multi-host serving-mesh item)"
             )
-        if spec.layout == "paged" and dist is not None:
+        if kv_spec.layout == "paged" and dist is not None:
             raise UnsupportedDistError(
                 "cache='paged' with a Distribution is not supported yet: "
                 "the block-table page gather would cross the sharded page "
@@ -239,7 +287,10 @@ class ContinuousBatcher:
             )
         self.packed = packed
         self.packed_capacity = (
-            packing.packed_capacity(batch_slots, chunk_size, token_budget)
+            packing.packed_capacity(
+                batch_slots, chunk_size, token_budget,
+                draft_k=self.spec.k if self.spec is not None else 0,
+            )
             if packed else None
         )
         self.dist = dist
@@ -253,8 +304,8 @@ class ContinuousBatcher:
         self.max_queue = max_queue
         self.slots = [_Slot() for _ in range(batch_slots)]
         self.kv: Optional[KVCache] = None
-        if spec.layout == "paged":
-            self.kv = spec.build(params, cfg)
+        if kv_spec.layout == "paged":
+            self.kv = kv_spec.build(params, cfg)
             self.cache = self.kv.state
         else:
             build = functools.partial(
@@ -276,7 +327,24 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
-        assert len(req.prompt) + req.max_new_tokens <= self.max_len, "request too long"
+        # raised, never assert-ed: under python -O an over-long request
+        # would be admitted and its out-of-range scatter writes silently
+        # dropped — wrong tokens served, no error anywhere
+        if not req.prompt:
+            raise InvalidRequestError(
+                f"request {req.uid}: empty prompt (decode needs at least "
+                f"one prompt token to condition on)"
+            )
+        if req.max_new_tokens < 1:
+            raise InvalidRequestError(
+                f"request {req.uid}: max_new_tokens must be >= 1, got "
+                f"{req.max_new_tokens}"
+            )
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise InvalidRequestError(
+                f"request {req.uid} too long: {len(req.prompt)} prompt + "
+                f"{req.max_new_tokens} new tokens > max_len {self.max_len}"
+            )
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             raise AdmissionError(
                 f"queue full ({len(self.queue)}/{self.max_queue}); retry later"
@@ -296,11 +364,48 @@ class ContinuousBatcher:
         req.submitted_at = time.perf_counter()
         self.queue.append(req)
 
+    def _dedup_inflight_prefix(self, head: Request) -> bool:
+        """In-flight prefix dedup: should ``head`` stay queued because an
+        active slot is still prefilling a prompt whose shareable prefix
+        pages ``head`` will be able to map once they land?
+
+        Prefix sharing only maps *fully-written* pages, so two identical
+        prompts prefilling in lockstep would each write their own copy —
+        duplicating the entire prefill.  Parking the duplicate until the
+        leader's pages are published turns that into one prefill plus a
+        page mapping.  Parking is bounded: the leader always progresses
+        (the starvation guard grants it >= 1 token per step) and parking
+        stops the moment the prefix cache can supply everything the
+        leader will ever publish for this prompt — or the leader stops
+        prefilling.
+        """
+        ps = self.kv.page_size
+        limit = (len(head.prompt) - 1) // ps  # head's shareable-block cap
+        if limit == 0:
+            return False
+        best = 0
+        for s in self.slots:
+            if s.free or not s.prefilling:
+                continue
+            p = s.req.prompt
+            m = 0
+            n_common = min(len(head.prompt), len(p))
+            while m < n_common and head.prompt[m] == p[m]:
+                m += 1
+            best = max(best, min(m // ps, limit))
+        if best == 0:
+            return False
+        return best * ps > self.kv.probe_shared(head.prompt)
+
     def _admit(self):
         for i, s in enumerate(self.slots):
             if s.free and self.queue:
                 if self.kv is not None:
                     head = self.queue[0]
+                    if self._dedup_inflight_prefix(head):
+                        # park: the leader's prefix pages will cover this
+                        # prompt; admission stays FIFO (no skip-ahead)
+                        break
                     shared = self.kv.admit_slot(
                         i, head.prompt, head.max_new_tokens
                     )
@@ -322,28 +427,80 @@ class ContinuousBatcher:
         return bool(self.queue) or any(not s.free for s in self.slots)
 
     # ------------------------------------------------------------------
-    def _schedule(self) -> List[int]:
+    def _propose(self) -> Dict[int, List[int]]:
+        """Ask the speculative proposer for draft tokens per decode slot.
+
+        The ask is clamped so the verify grant can never write past the
+        slot's cache (``max_len``) or emit past the request's
+        ``max_new_tokens`` — acceptance emits up to ``drafts + 1`` tokens.
+        """
+        if self.spec is None:
+            return {}
+        decode_slots = [
+            i for i, s in enumerate(self.slots) if not s.free and not s.prefilling
+        ]
+        # drafts are granted from the budget left after the unconditional
+        # decode baselines; don't pay proposer compute (a draft model is
+        # real work) for tokens the scheduler can never grant
+        headroom = (
+            self.spec.k if self.token_budget is None
+            else self.token_budget - len(decode_slots)
+        )
+        if headroom <= 0:
+            return {}
+        asks = []
+        for i in decode_slots:
+            s = self.slots[i]
+            r = s.req
+            k = min(
+                self.spec.k,
+                headroom,
+                r.max_new_tokens - len(r.output) - 1,
+                self.max_len - s.pos - 1,
+            )
+            if k > 0:
+                asks.append((i, r.prompt + r.output, k))
+        if not asks:
+            return {}
+        drafts = self.spec.proposer.propose_batch(asks)
+        # never trust a proposer to honor the clamp it was given
+        return {i: list(drafts.get(i, ()))[:k] for i, _, k in asks}
+
+    def _schedule(self, drafts: Dict[int, List[int]]) -> List[int]:
         """Per-slot token counts for this step under the budget.
 
-        Decode slots first (1 token each, unconditional), then prefill
-        chunks in admission order (oldest request first, NOT slot order —
-        slots are recycled, so slot index says nothing about age) until
-        ``token_budget`` is exhausted.  The oldest prefilling request is
-        always granted >= 1 token, so under sustained load every prompt
-        reaches the head of the line and makes progress: no starvation.
+        Decode baselines first (1 token each, unconditional), then
+        speculative draft tokens, then prefill chunks — both in admission
+        order (oldest request first, NOT slot order — slots are recycled,
+        so slot index says nothing about age) until ``token_budget`` is
+        exhausted.  Draft tokens rank above prefill (they extend decode
+        work, which the engine always prioritizes) but below baselines:
+        with a tight budget spec degrades gracefully to plain decode.
+        The oldest prefilling request is always granted >= 1 token, so
+        under sustained load every prompt reaches the head of the line
+        and makes progress: no starvation.
         """
         n = [0] * len(self.slots)
         spent = 0
-        prefill = []
+        prefill, decode = [], []
         for i, s in enumerate(self.slots):
             if s.free:
                 continue
             if not s.prefilling:
-                n[i] = 1  # decode: always scheduled
+                n[i] = 1  # decode baseline: always scheduled
                 spent += 1
+                decode.append(i)
             else:
                 prefill.append(i)
-        prefill.sort(key=lambda i: (self.slots[i].req.admitted_step, self.slots[i].req.uid))
+        by_age = lambda i: (self.slots[i].req.admitted_step, self.slots[i].req.uid)
+        decode.sort(key=by_age)
+        for i in decode:
+            want = len(drafts.get(i, ()))
+            left = want if self.token_budget is None else self.token_budget - spent
+            grant = min(want, max(left, 0))
+            n[i] += grant
+            spent += grant
+        prefill.sort(key=by_age)
         for rank, i in enumerate(prefill):
             s = self.slots[i]
             want = min(self.chunk_size, len(s.req.prompt) - s.pos)
@@ -355,13 +512,17 @@ class ContinuousBatcher:
             spent += grant
         return n
 
-    def _run_dense(self, grants) -> Dict[int, int]:
-        """Dense (B, C) step.  Returns {slot: argmax token at its last
-        granted column}."""
+    def _run_dense(self, grants) -> Dict[int, np.ndarray]:
+        """Dense (B, C) step.  Returns {slot: per-granted-column argmax
+        tokens} — the last column is the sampled/bonus token, the earlier
+        columns are what the speculative verifier checks drafts against."""
         b = len(self.slots)
-        c = self.chunk_size if any(
-            self.slots[i].prefilling for i, _, _ in grants
-        ) else 1
+        mixed = any(self.slots[i].prefilling for i, _, _ in grants)
+        c = self.chunk_size if mixed else 1
+        if self.spec is not None:
+            # verify grants are up to 1 + k wide; keep the two-programs
+            # shape story by folding them into fixed widths
+            c = max(c, self.spec.k + 1) if mixed else self.spec.k + 1
         tokens = np.zeros((b, c), np.int32)
         pos = np.zeros((b,), np.int32)
         lens = np.zeros((b,), np.int32)
@@ -378,9 +539,9 @@ class ContinuousBatcher:
         # token/pos buffers while the step is still in flight corrupts the
         # computation on jax<=0.4 CPU (observed use-after-free garbage).
         next_tok = np.asarray(jnp.argmax(logits, axis=-1))  # (B, C)
-        return {i: int(next_tok[i, len(toks) - 1]) for i, _, toks in grants}
+        return {i: next_tok[i, : len(toks)] for i, _, toks in grants}
 
-    def _run_packed(self, grants) -> Dict[int, int]:
+    def _run_packed(self, grants) -> Dict[int, np.ndarray]:
         """Token-packed (capacity,) step: compute scales with grants."""
         layout = packing.pack_step(grants, self.packed_capacity)
         logits, self.cache = _packed_engine_step(
@@ -388,10 +549,10 @@ class ContinuousBatcher:
             jnp.asarray(layout.slot_ids), jnp.asarray(layout.positions),
         )
         next_tok = np.asarray(jnp.argmax(logits, axis=-1))  # (P,) — syncs
-        return {i: int(next_tok[j]) for i, j in layout.last_index.items()}
+        return {i: next_tok[j : j + m] for i, (j, m) in layout.spans.items()}
 
     def step(self):
-        """One engine iteration: mixed chunked-prefill + decode."""
+        """One engine iteration: mixed chunked-prefill + decode/verify."""
         t0 = time.perf_counter()
         self._shared_step = 0
         self._admit()
@@ -404,9 +565,11 @@ class ContinuousBatcher:
                     if n_sh:
                         s.pos += n_sh
                         self._shared_step += n_sh
-        n = self._schedule()
-        decode_toks = prefill_toks = deferred = 0
+        drafts = self._propose()
+        n = self._schedule(drafts)
+        decode_toks = prefill_toks = deferred = draft_toks = accepted_toks = 0
         grants: List[packing.Grant] = []  # (slot, start pos, tokens)
+        granted_draft: Dict[int, List[int]] = {}
         for i, s in enumerate(self.slots):
             if s.free or n[i] == 0:
                 if not s.free and s.prefilling:
@@ -420,8 +583,12 @@ class ContinuousBatcher:
                     min(self.chunk_size, len(r.prompt) - s.pos) - n[i], 0
                 )
             else:
-                toks = [r.output[-1] if r.output else r.prompt[-1]]
+                # the budget may have truncated the proposer's draft
+                draft = drafts.get(i, [])[: n[i] - 1]
+                granted_draft[i] = draft
+                toks = [r.output[-1] if r.output else r.prompt[-1]] + draft
                 decode_toks += 1
+                draft_toks += len(draft)
             grants.append((i, s.pos, toks))
 
         if self.kv is not None:
@@ -432,7 +599,7 @@ class ContinuousBatcher:
             self.cache = self.kv.state
         used_pages = self.kv.used_pages if self.kv is not None else 0
 
-        last_tok = self._run_packed(grants) if self.packed else self._run_dense(grants)
+        greedy = self._run_packed(grants) if self.packed else self._run_dense(grants)
         if self.kv is not None:
             self.kv.state = self.cache
 
@@ -442,28 +609,45 @@ class ContinuousBatcher:
                 continue
             r = s.req
             was_prefilling = s.prefilling
-            s.pos += n[i]
-            if self.kv is not None and was_prefilling:
-                # publish fully-written prompt pages for prefix sharing
-                self.kv.register_prompt_pages(i, r.prompt, s.pos)
-            if was_prefilling and s.pos < len(r.prompt):
-                continue  # still mid-prompt; no token emitted this step
-            r.output.append(last_tok[i])
-            if len(r.output) == 1:
+            if was_prefilling:
+                s.pos += n[i]
+                if self.kv is not None:
+                    # publish fully-written prompt pages for prefix sharing
+                    self.kv.register_prompt_pages(i, r.prompt, s.pos)
+                if s.pos < len(r.prompt):
+                    continue  # still mid-prompt; no token emitted this step
+                emitted = [int(greedy[i][n[i] - 1])]
+            else:
+                # verify: keep the longest greedy-matching draft prefix
+                # (+ the bonus token), roll back the rejected tail's KV
+                accepted, emitted = accept_greedy(granted_draft[i], greedy[i])
+                accepted_toks += accepted
+                s.pos += 1 + accepted
+                if self.kv is not None and accepted < len(granted_draft[i]):
+                    self.kv.trim_slot(i, s.pos)
+            r.output.extend(emitted)
+            if r.first_token_at is None:
                 r.first_token_at = now
                 r.first_token_step = self.steps
             if r.done or s.pos >= self.max_len:
+                # a slot out of cache positions ends the request early;
+                # flag it rather than silently serving a short stream
+                r.truncated = not r.done
                 r.finished_at = now
                 self.finished[r.uid] = r
                 s.req = None  # slot becomes available next step
                 if self.kv is not None:
                     self.kv.free_slot(i)
+                if self.spec is not None:
+                    self.spec.proposer.free_slot(i)
 
         self.step_stats.append(
             StepStats(
                 self.steps, decode_toks, prefill_toks, deferred, now - t0,
                 shared_tokens=self._shared_step,
                 used_pages=used_pages,
+                draft_tokens=draft_toks,
+                accepted_tokens=accepted_toks,
             )
         )
         self.steps += 1
@@ -482,10 +666,14 @@ class ContinuousBatcher:
         The KV cache is left as-is: slots are position-masked, so stale
         rows from earlier requests are never attended.
         """
-        assert not self.busy, "reset_stats while requests are in flight"
+        if self.busy:
+            # raised, not assert-ed: under python -O a mid-flight reset
+            # would silently corrupt every in-flight request's accounting
+            raise EngineStateError("reset_stats while requests are in flight")
         self.steps = 0
         self.step_stats = []
         self.finished = {}
+        self._shared_step = 0  # stale counter from the last step otherwise
 
     def stats_summary(self) -> Dict[str, float]:
         """Aggregate engine + latency statistics."""
@@ -502,8 +690,28 @@ class ContinuousBatcher:
             if self.kv is not None
             else {}
         )
+        n_draft = sum(s.draft_tokens for s in st)
+        n_accept = sum(s.accepted_tokens for s in st)
+        spec = (
+            {
+                "draft_tokens": float(n_draft),
+                "accepted_tokens": float(n_accept),
+                "acceptance_rate": (
+                    n_accept / n_draft if n_draft else float("nan")
+                ),
+            }
+            if self.spec is not None
+            else {}
+        )
+        generated = sum(len(r.output) for r in done)
         return {
             **paged,
+            **spec,
+            "generated_tokens": float(generated),
+            "steps_per_token": (
+                self.steps / generated if generated else float("nan")
+            ),
+            "truncated": float(sum(r.truncated for r in done)),
             "steps": float(self.steps),
             "max_step_tokens": float(max((s.scheduled_tokens for s in st), default=0)),
             "mean_step_tokens": float(

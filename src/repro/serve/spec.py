@@ -1,0 +1,299 @@
+"""``repro.serve.spec`` — speculative decoding on the serving engine.
+
+Decode is the engine's remaining straggler: one token per request per
+step, so long generations dominate wall time the way long prompts did
+before chunked prefill.  Speculative decoding is the decode-side
+analogue of the per-step token budget (DropCompute's ``tau`` applied to
+serving): a cheap **proposer** guesses ``k`` tokens per decode slot, the
+target model **verifies** all of them in one bounded mixed step — the
+same shape-stable ``prefill_chunk``/``packed_prefill`` program family
+that runs chunked prefill (the contract is documented, and exposed for
+direct callers, as ``models.model.verify_step``) — and the engine keeps
+the longest greedy-matching prefix plus one bonus token.
+Per-token latency variance becomes a bounded verify step plus a
+stochastic acceptance count, and the emitted stream is **token-identical
+to the non-speculative greedy oracle by construction**: every emitted
+token is the target model's argmax given the accepted history, whatever
+the proposer guessed.
+
+Rollback of rejected drafts rides PR 4's cache machinery: dense slots
+need nothing (stale rows past the position cursor are never attended —
+position-mask trim), the paged layout drops the overshot blocks via
+``KVCache.trim_slot`` (the ``fork_slot``/COW allocator already keeps
+shared pages safe: a verify write never lands in a page another slot can
+see).
+
+Two proposers ship:
+
+* :class:`NGramProposer` — prompt-lookup decoding: match the slot's most
+  recent n-gram earlier in its own token history (prompt + output) and
+  propose the continuation.  Free (no second model), and strong on
+  repetitive or self-repeating streams — which greedy decode produces a
+  lot of.
+* :class:`DraftModelProposer` — a second, smaller model (its own
+  ``ModelConfig`` + params) runs ahead autoregressively on its own dense
+  KV cache, mirroring the engine's slots.  Rollback on the draft side is
+  again a free position-mask trim.
+
+The engine drives either through the same three calls:
+``propose_batch`` before scheduling, acceptance after the verify step,
+``free_slot`` when a request leaves its slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ModelConfig
+from ..models.model import init_decode_cache, prefill_chunk, require_chunkable
+
+#: one proposer ask: (slot index, token history = prompt + output, max k)
+Ask = Tuple[int, List[int], int]
+
+
+def accept_greedy(
+    draft: Sequence[int], greedy: Sequence[int]
+) -> Tuple[int, List[int]]:
+    """Longest greedy-matching draft prefix.
+
+    ``greedy`` is the verify step's per-column argmax for one slot
+    (length ``1 + len(draft)``): column ``j`` is the target's next token
+    after consuming the grant through column ``j``.  Draft ``j`` is
+    accepted iff it equals column ``j``'s argmax (the token the target
+    would have emitted at that point); the first mismatching — or final —
+    column supplies the bonus token.  Returns ``(n_accepted, emitted)``
+    with ``emitted == greedy[: n_accepted + 1]``, i.e. 1..k+1 tokens, all
+    of them exactly what non-speculative greedy decoding would emit.
+    """
+    a = 0
+    while a < len(draft) and int(draft[a]) == int(greedy[a]):
+        a += 1
+    return a, [int(t) for t in greedy[: a + 1]]
+
+
+class Proposer:
+    """Draft-token source for speculative decoding.
+
+    ``propose_batch`` receives every decode slot's ask for the coming
+    engine step and returns per-slot draft tokens (possibly fewer than
+    asked, possibly none — an empty draft degrades that slot to a plain
+    decode token).  Proposers may keep per-slot state; ``free_slot`` is
+    called when a request leaves its slot.
+    """
+
+    name = "null"
+
+    def bind_engine(self, batch_slots: int, max_len: int) -> None:
+        """Called once at engine construction with the engine's geometry;
+        stateful proposers validate theirs covers it (fail at
+        construction, not with an IndexError mid-serving)."""
+
+    def propose_batch(self, asks: Sequence[Ask]) -> Dict[int, List[int]]:
+        return {}
+
+    def free_slot(self, slot: int) -> None:  # pragma: no cover - stateless
+        pass
+
+
+class NGramProposer(Proposer):
+    """Prompt-lookup decoding: propose the continuation of the most recent
+    earlier occurrence of the history's trailing n-gram.
+
+    Tries the longest n-gram first (``max_ngram`` down to ``min_ngram``)
+    and scans the history right-to-left, so the most specific, most
+    recent match wins.  No model, no state — acceptance does all the
+    quality control.
+    """
+
+    name = "ngram"
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError(
+                f"need 1 <= min_ngram <= max_ngram, got {min_ngram}..{max_ngram}"
+            )
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def propose_batch(self, asks: Sequence[Ask]) -> Dict[int, List[int]]:
+        return {slot: self.propose(hist, k) for slot, hist, k in asks if k > 0}
+
+    def propose(self, history: Sequence[int], k: int) -> List[int]:
+        hist = list(history)
+        n_hist = len(hist)
+        for n in range(min(self.max_ngram, n_hist - 1), self.min_ngram - 1, -1):
+            suffix = hist[n_hist - n :]
+            for start in range(n_hist - n - 1, -1, -1):
+                if hist[start : start + n] == suffix:
+                    cont = hist[start + n : start + n + k]
+                    if cont:
+                        return [int(t) for t in cont]
+        return []
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _draft_step(params, cfg: ModelConfig, cache, tokens, pos, lens):
+    """Draft-model step, jitted per (cfg, shape): the catch-up chunked
+    prefill and the one-token-wide decode loop both land here."""
+    return prefill_chunk(params, cfg, cache, tokens, pos, lens, moe_impl="dense")
+
+
+class DraftModelProposer(Proposer):
+    """Draft tokens from a second, smaller model.
+
+    The draft model keeps its own dense KV cache with one slot per engine
+    slot.  Each ``propose_batch``: (1) *catch up* — chunk-prefill the
+    history tokens the draft cache hasn't seen (accepted target tokens,
+    including the previous step's rejected-region overwrites); (2) *run
+    ahead* — decode up to ``k`` draft tokens autoregressively, writing
+    their KV past the history.  The run-ahead KV is speculative by
+    definition, so the per-slot cursor stays at the history length:
+    whatever the target accepts arrives as next step's catch-up delta and
+    overwrites the speculated rows (dense position-mask rollback — stale
+    rows are never attended).
+
+    Compiled shapes: one ``(B, chunk_size)`` catch-up program and one
+    ``(B, 1)`` decode program, both per draft config — the same
+    shape-stability story as the engine itself.
+    """
+
+    name = "draft"
+
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        batch_slots: int,
+        max_len: int,
+        chunk_size: int = 32,
+    ):
+        require_chunkable(cfg, "DraftModelProposer")
+        if batch_slots < 1 or max_len < 1 or chunk_size < 1:
+            raise ValueError("batch_slots, max_len, chunk_size must be >= 1")
+        self.params = params
+        self.cfg = cfg
+        self.batch_slots = batch_slots
+        self.max_len = max_len
+        self.chunk_size = chunk_size
+        self.cache = init_decode_cache(
+            params, cfg, batch_slots, max_len, linear=True
+        )
+        self._pos = [0] * batch_slots  # history tokens the draft cache holds
+
+    def bind_engine(self, batch_slots: int, max_len: int) -> None:
+        if batch_slots > self.batch_slots or max_len > self.max_len:
+            raise ValueError(
+                f"DraftModelProposer(batch_slots={self.batch_slots}, "
+                f"max_len={self.max_len}) cannot cover an engine with "
+                f"batch_slots={batch_slots}, max_len={max_len}"
+            )
+
+    def free_slot(self, slot: int) -> None:
+        # the cache rows need no clearing: the next request's catch-up
+        # overwrites from position 0 and masking hides the rest
+        self._pos[slot] = 0
+
+    def propose_batch(self, asks: Sequence[Ask]) -> Dict[int, List[int]]:
+        asks = [
+            (s, h, min(k, self.max_len - len(h)))
+            for s, h, k in asks
+            if k > 0 and len(h) < self.max_len
+        ]
+        asks = [(s, h, k) for s, h, k in asks if k > 0]
+        if not asks:
+            return {}
+        for s, h, _ in asks:
+            if self._pos[s] > len(h):  # recycled slot: a new request began
+                self._pos[s] = 0
+
+        b = self.batch_slots
+        # 1) catch up on unseen history; the chunk containing each slot's
+        # final history token yields its first draft token
+        seed: Dict[int, int] = {}
+        while True:
+            tokens = np.zeros((b, self.chunk_size), np.int32)
+            pos = np.zeros((b,), np.int32)
+            lens = np.zeros((b,), np.int32)
+            finishing: List[int] = []
+            for s, h, _ in asks:
+                delta = len(h) - self._pos[s]
+                if delta == 0:
+                    continue
+                n = min(delta, self.chunk_size)
+                tokens[s, :n] = h[self._pos[s] : self._pos[s] + n]
+                pos[s] = self._pos[s]
+                lens[s] = n
+                self._pos[s] += n
+                if n == delta:
+                    finishing.append(s)
+            if not lens.any():
+                break
+            logits, self.cache = _draft_step(
+                self.params, self.cfg, self.cache, jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(lens),
+            )
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))  # (B, C) — syncs
+            for s in finishing:
+                seed[s] = int(nxt[s, int(lens[s]) - 1])
+
+        # 2) run ahead: up to max(k) one-token decode steps, all slots
+        # advancing together; each slot stops contributing past its k
+        drafts: Dict[int, List[int]] = {s: [seed[s]] for s, _, _ in asks}
+        max_k = max(k for _, _, k in asks)
+        cursor = {s: len(h) for s, h, _ in asks}
+        for j in range(max_k - 1):
+            tokens = np.zeros((b, 1), np.int32)
+            pos = np.zeros((b,), np.int32)
+            lens = np.zeros((b,), np.int32)
+            active = [
+                (s, k) for s, _, k in asks
+                if len(drafts[s]) < k and cursor[s] < self.max_len
+            ]
+            if not active:
+                break
+            for s, _ in active:
+                tokens[s, 0] = drafts[s][-1]
+                pos[s] = cursor[s]
+                lens[s] = 1
+            logits, self.cache = _draft_step(
+                self.params, self.cfg, self.cache, jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(lens),
+            )
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for s, _ in active:
+                drafts[s].append(int(nxt[s, 0]))
+                cursor[s] += 1
+        # the run-ahead rows are speculative: leave _pos at the history
+        # length so next step's catch-up overwrites them
+        return drafts
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Speculative-decoding knobs for ``ContinuousBatcher``.
+
+    proposer: draft source (``NGramProposer`` / ``DraftModelProposer`` /
+      any :class:`Proposer`).
+    k: max draft tokens verified per decode slot per step.  The verify
+      grant is ``1 + accepted_drafts`` cache writes and ``accepted + 1``
+      emitted tokens; draft tokens are scheduled *under the engine's
+      token budget* (decode baselines stay unconditional), so ``tau``
+      bounds the verify step exactly like it bounds prefill chunks.
+    """
+
+    proposer: Proposer
+    k: int = 4
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"SpecConfig.k must be >= 1, got {self.k}")
+        if not isinstance(self.proposer, Proposer):
+            raise TypeError(
+                f"proposer must be a repro.serve.spec.Proposer, got "
+                f"{type(self.proposer).__name__}"
+            )

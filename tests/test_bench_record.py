@@ -1,0 +1,55 @@
+"""The committed serving perf record (``BENCH_serve.json``) parses and
+carries every engine mode — the repo's benchmark trajectory is a
+contract, not a dropping.
+
+CI regenerates the record in the full lane (``serve_throughput.py
+--packed --spec --json``); this tier-1 check pins the committed copy so
+a PR can't silently drop a mode (the speculative row in particular) or
+break the schema consumers parse.
+"""
+import json
+import math
+import os
+
+import pytest
+
+BENCH = os.path.join(os.path.dirname(__file__), os.pardir, "BENCH_serve.json")
+
+
+@pytest.fixture(scope="module")
+def record():
+    assert os.path.exists(BENCH), "BENCH_serve.json missing at the repo root"
+    with open(BENCH) as f:
+        return json.load(f)
+
+
+class TestBenchRecord:
+    def test_all_modes_present(self, record):
+        modes = {r["mode"] for r in record["rows"]}
+        assert modes == {"dense", "packed", "paged", "spec"}, modes
+
+    def test_rows_carry_steps_per_token(self, record):
+        for r in record["rows"]:
+            assert math.isfinite(r["steps_per_token"]), r
+
+    def test_spec_rows_parse(self, record):
+        spec_rows = [r for r in record["rows"] if r["mode"] == "spec"]
+        assert spec_rows
+        for r in spec_rows:
+            assert 0.0 <= r["acceptance_rate"] <= 1.0
+            assert r["draft_tokens"] >= 0
+
+    def test_speculative_record_clears_bar(self, record):
+        """The acceptance criterion: >= 1.5x fewer engine steps per
+        generated token with the n-gram proposer on repetitive prompts."""
+        rec = record["speculative"]
+        assert rec["proposer"] == "ngram" and rec["k"] >= 1
+        assert 0.0 <= rec["acceptance_rate"] <= 1.0
+        assert rec["step_reduction"] >= 1.5
+        ratio = rec["steps_per_token"]["greedy"] / rec["steps_per_token"]["spec"]
+        assert ratio == pytest.approx(rec["step_reduction"])
+
+    def test_prefix_sharing_record_present(self, record):
+        rec = record["prefix_sharing"]
+        assert rec["second_request_prefill_steps"]["shared"] < \
+            rec["second_request_prefill_steps"]["disjoint"]

@@ -164,7 +164,7 @@ def test_packed_layout_invariants(state, slack):
         np.testing.assert_array_equal(lay.positions[idx], pos0 + np.arange(len(toks)))
         np.testing.assert_array_equal(lay.tokens[idx], toks)
         if toks:
-            assert lay.last_index[slot] == idx[-1]
+            assert lay.spans[slot] == (idx[0], len(toks))
 
     # overflow is loud, not truncating
     if total > 0:

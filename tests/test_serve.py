@@ -6,7 +6,7 @@ import pytest
 
 from repro.models import ModelConfig
 from repro.models.model import decode_step, init_decode_cache, init_params
-from repro.serve import ContinuousBatcher, Request
+from repro.serve import ContinuousBatcher, InvalidRequestError, Request
 
 pytestmark = pytest.mark.slow  # full-lane only; tier-1 covers this path via faster tests
 
@@ -56,5 +56,6 @@ class TestContinuousBatching:
 
     def test_rejects_too_long(self):
         eng = ContinuousBatcher(self.params, CFG, batch_slots=1, max_len=8)
-        with pytest.raises(AssertionError):
+        # typed (survives python -O), not the seed's bare assert
+        with pytest.raises(InvalidRequestError):
             eng.submit(Request(uid=0, prompt=list(range(7)), max_new_tokens=5))

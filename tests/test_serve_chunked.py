@@ -206,8 +206,11 @@ class TestAdmissionAndStats:
         assert len(eng.run()) == 3
 
     def test_rejects_too_long(self, params):
+        from repro.serve import InvalidRequestError
+
         eng = ContinuousBatcher(params, CFG, batch_slots=1, max_len=8)
-        with pytest.raises(AssertionError):
+        # typed (survives python -O), not the seed's bare assert
+        with pytest.raises(InvalidRequestError):
             eng.submit(Request(uid=0, prompt=list(range(7)), max_new_tokens=5))
 
     def test_latency_stats_populated(self, params):

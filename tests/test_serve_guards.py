@@ -1,0 +1,161 @@
+"""Engine failure paths: typed admission errors that survive ``python -O``,
+the truncation flag, and stats-reset hygiene.
+
+The seed guards were bare ``assert``s: under ``python -O`` an over-long
+request was admitted and its out-of-range scatter writes silently
+dropped — wrong tokens served with no error anywhere.  These tests pin
+the typed replacements, including a real ``python -O`` subprocess run.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig
+from repro.models.model import init_params
+from repro.serve import (
+    ContinuousBatcher,
+    EngineStateError,
+    InvalidRequestError,
+    Request,
+)
+
+CFG = ModelConfig(
+    name="serve-guard-t", n_layers=1, d_model=16, n_heads=2, n_kv_heads=1,
+    d_ff=32, vocab_size=53, layer_pattern="G", dtype="float32", remat=False,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def engine(params):
+    return ContinuousBatcher(params, CFG, batch_slots=1, max_len=8)
+
+
+class TestSubmitValidation:
+    def test_too_long_typed(self, engine):
+        with pytest.raises(InvalidRequestError, match="too long"):
+            engine.submit(Request(uid=0, prompt=list(range(7)), max_new_tokens=5))
+        # typed error is a ValueError: pre-existing handlers keep working
+        with pytest.raises(ValueError):
+            engine.submit(Request(uid=0, prompt=list(range(7)), max_new_tokens=5))
+
+    def test_empty_prompt_typed(self, engine):
+        """An empty prompt used to reach ``r.prompt[-1]`` mid-step and
+        die with an IndexError inside the engine loop."""
+        with pytest.raises(InvalidRequestError, match="empty prompt"):
+            engine.submit(Request(uid=0, prompt=[], max_new_tokens=2))
+
+    @pytest.mark.parametrize("bad_new", [0, -3])
+    def test_nonpositive_max_new_typed(self, engine, bad_new):
+        with pytest.raises(InvalidRequestError, match="max_new_tokens"):
+            engine.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=bad_new))
+
+    def test_rejects_nothing_valid(self, engine):
+        engine.submit(Request(uid=99, prompt=[1, 2, 3], max_new_tokens=5))
+        assert engine.queue.pop().uid == 99  # valid request admitted
+
+    @pytest.mark.parametrize("bad_kw", [{"chunk_size": 0}, {"token_budget": 0}])
+    def test_constructor_knobs_typed(self, params, bad_kw):
+        with pytest.raises(ValueError):
+            ContinuousBatcher(params, CFG, batch_slots=1, max_len=8, **bad_kw)
+
+
+class TestResetStats:
+    def test_reset_while_busy_typed(self, params):
+        eng = ContinuousBatcher(params, CFG, batch_slots=1, max_len=8)
+        eng.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=2))
+        assert eng.busy
+        with pytest.raises(EngineStateError, match="in flight"):
+            eng.reset_stats()
+        eng.run()
+        eng.reset_stats()  # idle: fine
+
+    def test_reset_clears_shared_step_counter(self, params):
+        """A stale ``_shared_step`` from the last pre-reset step would
+        pollute the first post-warmup StepStats row."""
+        eng = ContinuousBatcher(params, CFG, batch_slots=1, max_len=8)
+        eng._shared_step = 7  # as left behind by a final sharing step
+        eng.reset_stats()
+        assert eng._shared_step == 0
+        assert eng.steps == 0 and eng.step_stats == [] and eng.finished == {}
+
+
+class TestTruncation:
+    def test_out_of_positions_flagged(self, params):
+        """A request that slips past admission (the -O scenario this PR
+        closes, or any future producer writing ``queue`` directly) must
+        finish *flagged*, not silently short."""
+        eng = ContinuousBatcher(params, CFG, batch_slots=1, max_len=8)
+        req = Request(uid=0, prompt=[1, 2, 3, 4], max_new_tokens=10)
+        eng.queue.append(req)  # bypass submit, as python -O used to
+        eng.run()
+        assert req.uid in eng.finished
+        assert len(req.output) < req.max_new_tokens
+        assert req.truncated
+        assert eng.stats_summary()["truncated"] == 1.0
+
+    def test_normal_finish_not_flagged(self, params):
+        eng = ContinuousBatcher(params, CFG, batch_slots=1, max_len=8)
+        eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=4))
+        eng.run()
+        assert not eng.finished[0].truncated
+        assert eng.stats_summary()["truncated"] == 0.0
+
+
+class TestPythonOptimized:
+    def test_guards_survive_python_O(self):
+        """The whole point of the typed errors: run the same checks in a
+        ``python -O`` subprocess, where the seed's bare asserts vanished."""
+        script = """
+import jax
+from repro.models import ModelConfig
+from repro.models.model import init_params
+from repro.serve import (ContinuousBatcher, EngineStateError,
+                         InvalidRequestError, Request)
+
+assert True is not False or True  # asserts are really off?  see below
+cfg = ModelConfig(name="o-t", n_layers=1, d_model=16, n_heads=2, n_kv_heads=1,
+                  d_ff=32, vocab_size=53, layer_pattern="G", dtype="float32",
+                  remat=False)
+eng = ContinuousBatcher(init_params(jax.random.PRNGKey(0), cfg), cfg,
+                        batch_slots=1, max_len=8)
+for bad in (
+    Request(uid=0, prompt=list(range(7)), max_new_tokens=5),  # too long
+    Request(uid=1, prompt=[], max_new_tokens=2),              # empty prompt
+    Request(uid=2, prompt=[1], max_new_tokens=0),             # no new tokens
+):
+    try:
+        eng.submit(bad)
+    except InvalidRequestError:
+        pass
+    else:
+        raise SystemExit(f"submit({bad.uid}) did not raise under -O")
+eng.submit(Request(uid=3, prompt=[1, 2], max_new_tokens=2))
+try:
+    eng.reset_stats()
+except EngineStateError:
+    pass
+else:
+    raise SystemExit("reset_stats did not raise while busy under -O")
+eng.run()
+print("OK")
+"""
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+        env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get(
+            "PYTHONPATH", ""
+        )
+        proc = subprocess.run(
+            [sys.executable, "-O", "-c", script],
+            capture_output=True, text=True, env=env, timeout=300,
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "OK" in proc.stdout

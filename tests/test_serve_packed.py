@@ -124,7 +124,7 @@ class TestPackingLayout:
         np.testing.assert_array_equal(
             lay.positions, [5, 0, 1, 2, 7, 8, 0, 0])
         np.testing.assert_array_equal(lay.segment_starts, [0, 1, 4, 6])
-        assert lay.last_index == {0: 0, 2: 3, 1: 5}
+        assert lay.spans == {0: (0, 1), 2: (1, 3), 1: (4, 2)}
 
     def test_pack_step_overflow_raises(self):
         with pytest.raises(ValueError, match="overflow"):
@@ -132,7 +132,7 @@ class TestPackingLayout:
 
     def test_zero_token_grants_occupy_nothing(self):
         lay = pack_step([(0, 4, []), (1, 0, [7])], capacity=2)
-        assert lay.n_tokens == 1 and lay.last_index == {1: 0}
+        assert lay.n_tokens == 1 and lay.spans == {1: (0, 1)}
 
 
 class TestPackedModelPath:
@@ -168,7 +168,8 @@ class TestPackedModelPath:
             for i, p in enumerate(prompts):
                 if lens[i] and pos[i] + lens[i] == len(p):
                     last_d[i] = np.asarray(lg_d[i, lens[i] - 1])
-                    last_p[i] = np.asarray(lg_p[lay.last_index[i]])
+                    j0, m = lay.spans[i]
+                    last_p[i] = np.asarray(lg_p[j0 + m - 1])
                 pos[i] += int(lens[i])
         for i in last_d:
             np.testing.assert_allclose(last_p[i], last_d[i], atol=1e-5)

@@ -190,6 +190,66 @@ class TestPrefixSharing:
         assert eng.finished[1].output == dense.finished[0].output
 
 
+class TestInflightPrefixDedup:
+    def test_identical_prompts_dedup_in_flight(self, params):
+        """Two identical prompts submitted together: the follower is
+        parked at admission until the leader's prefix pages land, then
+        maps them — one prefill step instead of re-prefilling the whole
+        prompt in lockstep (the PR-4 known gap)."""
+        rng = np.random.default_rng(9)
+        prompt = rng.integers(0, CFG.vocab_size, size=48).tolist()
+        eng = ContinuousBatcher(params, CFG, batch_slots=2, max_len=64,
+                                chunk_size=16, cache="paged", page_size=16)
+        for uid in range(2):
+            eng.submit(Request(uid=uid, prompt=list(prompt), max_new_tokens=4))
+        eng.run()
+        eng.kv.tables.check_invariants()
+        leader, follower = eng.finished[0], eng.finished[1]
+        assert leader.ttft_steps == 3  # 48 tokens / chunk 16
+        assert follower.ttft_steps == 1  # maps 2 shared pages, prefills 16
+        # full blocks strictly before the prompt's last token are shared
+        assert sum(s.shared_tokens for s in eng.step_stats) == 32
+        # 48 + 16 prompt tokens computed, not 96
+        assert sum(s.prefill_tokens for s in eng.step_stats) == 64
+        assert follower.output == leader.output
+
+        dense = ContinuousBatcher(params, CFG, batch_slots=2, max_len=64,
+                                  chunk_size=16)
+        dense.submit(Request(uid=0, prompt=list(prompt), max_new_tokens=4))
+        dense.run()
+        assert leader.output == dense.finished[0].output
+
+    def test_disjoint_prompts_not_parked(self, params):
+        """Dedup must never park prompts that share nothing: both admit
+        immediately and prefill concurrently."""
+        rng = np.random.default_rng(10)
+        prompts = [rng.integers(0, CFG.vocab_size, size=48).tolist()
+                   for _ in range(2)]
+        eng = ContinuousBatcher(params, CFG, batch_slots=2, max_len=64,
+                                chunk_size=16, cache="paged", page_size=16)
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+        eng.step()
+        assert all(not s.free for s in eng.slots)  # both admitted at step 0
+        eng.run()
+        assert sum(s.shared_tokens for s in eng.step_stats) == 0
+
+    def test_parking_is_bounded(self, params):
+        """The parked follower admits once the leader stops prefilling —
+        even when pool pressure evicted the leader's cached pages."""
+        rng = np.random.default_rng(11)
+        prompt = rng.integers(0, CFG.vocab_size, size=32).tolist()
+        # pool so tight the leader's pages cannot be retained for sharing
+        eng = ContinuousBatcher(params, CFG, batch_slots=2, max_len=48,
+                                chunk_size=16, cache="paged", page_size=16,
+                                num_pages=3)
+        for uid in range(2):
+            eng.submit(Request(uid=uid, prompt=list(prompt), max_new_tokens=4))
+        eng.run(max_steps=200)
+        assert sorted(eng.finished) == [0, 1]
+        assert eng.finished[0].output == eng.finished[1].output
+
+
 # ---------------------------------------------------------------------------
 # Fork + copy-on-write at the model level
 # ---------------------------------------------------------------------------

@@ -1,0 +1,463 @@
+"""Speculative decoding: greedy-oracle parity, proposers, rollback.
+
+The non-speculative engine is the oracle: speculative output streams
+must be **token-identical** across every (cache layout, budget, packing)
+point — acceptance keeps exactly the drafts the target model would have
+emitted anyway, so correctness never depends on proposer quality.  The
+adversarial `JunkProposer` (deterministic junk, ~0% acceptance) drives
+the rollback path hard; hypothesis property tests pin the allocator
+invariants under arbitrary fork/trim interleavings.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig
+from repro.models.model import (
+    decode_step,
+    init_decode_cache,
+    init_params,
+    verify_step,
+)
+from repro.serve import (
+    ContinuousBatcher,
+    DraftModelProposer,
+    NGramProposer,
+    OutOfPages,
+    PagedTables,
+    Proposer,
+    Request,
+    SpecConfig,
+    accept_greedy,
+    packed_capacity,
+)
+
+CFG = ModelConfig(
+    name="serve-spec-t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+    vocab_size=101, layer_pattern="LG", sliding_window=6, dtype="float32", remat=False,
+)
+
+PROMPT_LENS = (3, 5, 12, 4, 8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def make_prompts(seed=0, lens=PROMPT_LENS):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab_size, size=n).tolist() for n in lens]
+
+
+def run_engine(params, prompts, max_new=8, check=False, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("chunk_size", 16)
+    eng = ContinuousBatcher(params, CFG, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=max_new))
+    if check:
+        while eng.busy:
+            eng.step()
+            if eng.kv is not None:
+                eng.kv.tables.check_invariants()
+    else:
+        eng.run()
+    return eng
+
+
+def outputs(eng):
+    return {u: r.output for u, r in eng.finished.items()}
+
+
+class JunkProposer(Proposer):
+    """Deterministic junk drafts — near-total rejection, so every verify
+    step exercises the rollback path."""
+
+    name = "junk"
+
+    def __init__(self):
+        self.calls = 0
+
+    def propose_batch(self, asks):
+        out = {}
+        for slot, hist, k in asks:
+            self.calls += 1
+            out[slot] = [
+                (hist[-1] * 7 + j * 13 + self.calls) % CFG.vocab_size
+                for j in range(k)
+            ]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Greedy-oracle parity (the acceptance matrix)
+# ---------------------------------------------------------------------------
+
+
+class TestSpecParity:
+    @pytest.fixture(scope="class")
+    def oracle(self, params):
+        return run_engine(params, make_prompts())
+
+    @pytest.mark.parametrize("budget", [None, 4, 16])
+    @pytest.mark.parametrize("cache", ["dense", "paged"])
+    def test_ngram_matrix(self, params, oracle, budget, cache):
+        """{dense, paged} x budgets {None, 4, 16}: spec output streams are
+        token-identical to the non-speculative greedy oracle."""
+        eng = run_engine(
+            params, make_prompts(), token_budget=budget, cache=cache,
+            check=True, spec=SpecConfig(NGramProposer(), k=4),
+        )
+        assert outputs(eng) == outputs(oracle)
+        if eng.kv is not None:
+            assert eng.kv.used_pages == 0  # every page came back
+
+    @pytest.mark.parametrize("cache", ["dense", "paged"])
+    def test_junk_drafts_all_rejected_still_exact(self, params, oracle, cache):
+        """~0% acceptance: every step rolls rejected KV back (trim for
+        paged, position mask for dense) and the stream stays exact."""
+        eng = run_engine(
+            params, make_prompts(), cache=cache, token_budget=8,
+            check=True, spec=SpecConfig(JunkProposer(), k=3),
+        )
+        assert outputs(eng) == outputs(oracle)
+        s = eng.stats_summary()
+        assert s["draft_tokens"] > 0
+        assert s["acceptance_rate"] < 0.2  # junk is junk
+
+    def test_packed_spec_parity(self, params, oracle):
+        eng = run_engine(
+            params, make_prompts(), cache="paged", packed=True,
+            token_budget=8, check=True, spec=SpecConfig(NGramProposer(), k=4),
+        )
+        assert outputs(eng) == outputs(oracle)
+
+    def test_spec_reduces_engine_steps(self, params, oracle):
+        """Self-repeating greedy streams are n-gram territory: fewer
+        engine steps per generated token than 1-token-per-step decode."""
+        eng = run_engine(
+            params, make_prompts(), cache="paged",
+            spec=SpecConfig(NGramProposer(), k=4),
+        )
+        assert outputs(eng) == outputs(oracle)
+        assert eng.steps < oracle.steps
+        assert eng.stats_summary()["steps_per_token"] < \
+            oracle.stats_summary()["steps_per_token"]
+
+    def test_draft_model_proposer_same_model(self, params, oracle):
+        """Draft == target: every draft is the target's own greedy token,
+        so acceptance is total and steps collapse."""
+        prop = DraftModelProposer(params, CFG, batch_slots=2, max_len=32)
+        eng = run_engine(params, make_prompts(), cache="paged",
+                         spec=SpecConfig(prop, k=4))
+        assert outputs(eng) == outputs(oracle)
+        s = eng.stats_summary()
+        assert s["acceptance_rate"] == 1.0
+        assert eng.steps < oracle.steps
+
+    def test_budget_caps_verify_grants(self, params):
+        """Draft tokens are scheduled under tau: a step's scheduled
+        tokens never exceed the packed-capacity bound."""
+        eng = run_engine(
+            params, make_prompts(), token_budget=4, cache="paged",
+            packed=True, spec=SpecConfig(NGramProposer(), k=4),
+        )
+        cap = packed_capacity(2, 16, 4, draft_k=4)
+        assert all(s.scheduled_tokens <= cap for s in eng.step_stats)
+        assert cap == packed_capacity(2, 16, 4)  # budgeted bound unchanged
+
+
+# ---------------------------------------------------------------------------
+# The verify path at the model level
+# ---------------------------------------------------------------------------
+
+
+class TestVerifyStep:
+    def test_per_position_logits_match_sequential_decode(self, params):
+        """One (B, 1+k) verify_step call == k+1 sequential decode_step
+        calls: column j's logits are the next-token distribution after
+        consuming the row through column j."""
+        rng = np.random.default_rng(6)
+        prompt = rng.integers(0, CFG.vocab_size, size=6).tolist()
+        drafts = rng.integers(0, CFG.vocab_size, size=3).tolist()
+        row = [prompt[-1]] + drafts  # [t_last, d_1..d_k] at pos 5..8
+
+        def prefilled_cache():
+            cache = init_decode_cache(params, CFG, 1, 24, linear=True)
+            toks = jnp.asarray([prompt[:-1]], jnp.int32)
+            _, cache = verify_step(  # prefill is the same program
+                params, CFG, cache, toks,
+                jnp.asarray([0], jnp.int32), jnp.asarray([5], jnp.int32))
+            return cache
+
+        vlogits, _ = verify_step(
+            params, CFG, prefilled_cache(), jnp.asarray([row], jnp.int32),
+            jnp.asarray([5], jnp.int32), jnp.asarray([4], jnp.int32))
+
+        cache = prefilled_cache()
+        for j, tok in enumerate(row):
+            slogits, cache = decode_step(
+                params, CFG, cache, jnp.asarray([[tok]], jnp.int32),
+                jnp.int32(5 + j))
+            np.testing.assert_allclose(
+                np.asarray(vlogits[0, j]), np.asarray(slogits[0, -1]),
+                atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance + proposer units
+# ---------------------------------------------------------------------------
+
+
+class TestAcceptGreedy:
+    def test_all_accepted(self):
+        a, emitted = accept_greedy([5, 6, 7], [5, 6, 7, 8])
+        assert a == 3 and emitted == [5, 6, 7, 8]
+
+    def test_first_mismatch_bonus(self):
+        a, emitted = accept_greedy([5, 9, 7], [5, 6, 7, 8])
+        assert a == 1 and emitted == [5, 6]
+
+    def test_no_draft_is_plain_decode(self):
+        a, emitted = accept_greedy([], [42])
+        assert a == 0 and emitted == [42]
+
+    def test_immediate_mismatch(self):
+        a, emitted = accept_greedy([9], [5, 6])
+        assert a == 0 and emitted == [5]
+
+
+class TestNGramProposer:
+    def test_proposes_continuation_of_last_match(self):
+        p = NGramProposer(max_ngram=3)
+        hist = [1, 2, 3, 4, 9, 9, 1, 2, 3]
+        assert p.propose(hist, 2) == [4, 9]
+
+    def test_most_recent_match_wins(self):
+        p = NGramProposer(max_ngram=2)
+        hist = [7, 8, 1, 7, 8, 2, 7, 8]
+        assert p.propose(hist, 1) == [2]
+
+    def test_no_match_empty(self):
+        assert NGramProposer().propose([1, 2, 3, 4], 4) == []
+
+    def test_longer_ngram_preferred(self):
+        p = NGramProposer(max_ngram=3)
+        # 1-gram [3] matches at index 0 (-> 5); 2-gram [2, 3] at 1 (-> 4)
+        hist = [3, 5, 2, 3, 4, 2, 3]
+        assert p.propose(hist, 1) == [4]
+
+    def test_short_history(self):
+        assert NGramProposer().propose([1], 4) == []
+        assert NGramProposer().propose([1, 1], 4) == [1]
+
+    def test_invalid_ngram_range(self):
+        with pytest.raises(ValueError):
+            NGramProposer(max_ngram=2, min_ngram=3)
+
+
+class TestProposerEconomics:
+    def test_no_proposer_calls_without_budget_headroom(self, params):
+        """token_budget <= decode baselines leaves no room for drafts:
+        the proposer (a draft model is real compute) must not run at
+        all, and outputs still match the oracle."""
+        counting = JunkProposer()
+        eng = run_engine(params, make_prompts(), token_budget=1,
+                         spec=SpecConfig(counting, k=4))
+        assert counting.calls == 0
+        assert all(s.draft_tokens == 0 for s in eng.step_stats)
+        assert outputs(eng) == outputs(run_engine(params, make_prompts(),
+                                                  token_budget=1))
+
+    def test_ask_clamped_to_headroom(self, params):
+        """With budget 4 and up to 2 decode baselines, no single ask may
+        exceed the leftover headroom."""
+        seen = []
+
+        class Recording(NGramProposer):
+            def propose_batch(self, asks):
+                seen.extend(k for _, _, k in asks)
+                return super().propose_batch(asks)
+
+        run_engine(params, make_prompts(), token_budget=4,
+                   spec=SpecConfig(Recording(), k=4))
+        assert seen and max(seen) <= 3  # 4 budget - >=1 baseline
+
+    def test_draft_proposer_geometry_validated_at_construction(self, params):
+        """An undersized draft cache must fail at engine construction,
+        not with an IndexError when a request lands in a high slot."""
+        prop = DraftModelProposer(params, CFG, batch_slots=1, max_len=32)
+        with pytest.raises(ValueError, match="cannot cover"):
+            ContinuousBatcher(params, CFG, batch_slots=2, max_len=32,
+                              spec=SpecConfig(prop, k=2))
+        prop2 = DraftModelProposer(params, CFG, batch_slots=2, max_len=16)
+        with pytest.raises(ValueError, match="cannot cover"):
+            ContinuousBatcher(params, CFG, batch_slots=2, max_len=32,
+                              spec=SpecConfig(prop2, k=2))
+
+
+class TestSpecConfig:
+    def test_k_validated(self):
+        with pytest.raises(ValueError, match="k"):
+            SpecConfig(NGramProposer(), k=0)
+
+    def test_proposer_type_checked(self):
+        with pytest.raises(TypeError, match="Proposer"):
+            SpecConfig(proposer="ngram")
+
+    def test_bare_proposer_wrapped(self, params):
+        eng = ContinuousBatcher(params, CFG, batch_slots=2, max_len=24,
+                                spec=NGramProposer())
+        assert isinstance(eng.spec, SpecConfig) and eng.spec.k >= 1
+
+
+# ---------------------------------------------------------------------------
+# Rollback at the allocator level: fork_slot + trim property tests
+# ---------------------------------------------------------------------------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):
+        return lambda f: f
+
+    settings = given
+
+    class st:  # noqa: N801
+        @staticmethod
+        def _none(*a, **k):
+            return None
+
+        lists = tuples = integers = _none
+
+
+class TestTrim:
+    def test_trim_frees_overshot_blocks(self):
+        t = PagedTables(num_slots=2, num_blocks=6, num_pages=12, page_size=4)
+        t.admit(0, list(range(5)), 12)
+        t.prepare_write(0, 0, 5 + 8)  # 5 prompt + 8 speculative = 4 blocks
+        assert len(t.tables[0]) == 4
+        dropped = t.trim(0, 6)  # keep 6 tokens -> 2 blocks
+        assert dropped == 2 and len(t.tables[0]) == 2
+        t.check_invariants()
+        # dropped blocks return to the reservation, so a re-write succeeds
+        t.prepare_write(0, 6, 8)
+        t.check_invariants()
+
+    def test_trim_noop_within_kept_blocks(self):
+        t = PagedTables(num_slots=1, num_blocks=4, num_pages=8, page_size=4)
+        t.admit(0, list(range(5)), 3)
+        t.prepare_write(0, 0, 6)
+        assert t.trim(0, 6) == 0  # block holding the last kept token stays
+        assert t.trim(0, 5) == 0
+        t.check_invariants()
+
+    def test_trim_after_fork_cow_isolated(self):
+        """fork_slot + speculative write + trim: the parent's pages are
+        untouched, the child's COW copies are freed, nothing leaks."""
+        t = PagedTables(num_slots=2, num_blocks=4, num_pages=10, page_size=4)
+        t.admit(0, list(range(6)), 2)
+        t.prepare_write(0, 0, 6)
+        parent_pages = list(t.tables[0])
+        t.fork(0, 1)
+        ops = t.prepare_write(1, 6, 4)  # COW block 1 + alloc block 2
+        assert len(ops) == 1
+        t.trim(1, 6)  # reject everything the child speculated
+        t.check_invariants()
+        assert t.tables[0] == parent_pages
+        t.free_slot(1)
+        t.free_slot(0)
+        t.check_invariants()
+        assert t.used_pages == 0
+
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.integers(min_value=0, max_value=4),   # admit/write/trim/fork/free
+        st.integers(min_value=0, max_value=2),   # slot
+        st.integers(min_value=1, max_value=14),  # prompt len / write / keep
+        st.integers(min_value=1, max_value=6),   # max_new
+    ),
+    min_size=1, max_size=50,
+)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestRollbackProperties:
+    @settings(max_examples=60, deadline=None)
+    @given(ops_strategy, st.integers(min_value=0, max_value=2**31 - 1))
+    def test_fork_trim_never_leaks(self, ops, seed):
+        """Arbitrary admit / speculative-write / trim / fork / free
+        interleavings: ``check_invariants`` holds after every op and every
+        page comes back at the end — trim after an arbitrary
+        accepted-prefix length neither leaks nor double-frees."""
+        rng = np.random.default_rng(seed)
+        t = PagedTables(num_slots=3, num_blocks=5, num_pages=24, page_size=4)
+        live = {}  # slot -> [prompt, written, limit]
+        for op, slot, a, b in ops:
+            if op == 0 and slot not in live and not t.tables[slot]:
+                prompt = rng.integers(0, 97, size=a).tolist()
+                if t.blocks_for(a + b) <= t.num_blocks:
+                    shared = t.admit(slot, prompt, b)
+                    if shared is not None:
+                        live[slot] = [prompt, shared, a + b]
+            elif op == 1 and slot in live:
+                prompt, pos, limit = live[slot]
+                n = min(a, limit - pos)
+                if n > 0:
+                    try:
+                        t.prepare_write(slot, pos, n)
+                    except OutOfPages:
+                        pass  # fork-driven overcommit; invariants must hold
+                    else:
+                        live[slot][1] = pos + n
+                        t.register_prompt_pages(slot, prompt, pos + n)
+            elif op == 2 and slot in live:
+                # roll back to an arbitrary accepted-prefix length
+                keep = min(a, live[slot][1])
+                t.trim(slot, keep)
+                live[slot][1] = min(live[slot][1], keep)
+            elif op == 3 and slot in live:
+                child = next(
+                    (c for c in range(3) if c not in live and not t.tables[c]),
+                    None,
+                )
+                if child is not None:
+                    t.fork(slot, child)
+                    live[child] = [list(live[slot][0]), live[slot][1],
+                                   live[slot][2]]
+            elif op == 4 and slot in live:
+                t.free_slot(slot)
+                del live[slot]
+            t.check_invariants()
+        for slot in list(live):
+            t.free_slot(slot)
+        t.check_invariants()
+        assert t.used_pages == 0
+        assert all(r == 0 for r in t.ref)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(min_value=1, max_value=20),
+           st.integers(min_value=0, max_value=20),
+           st.integers(min_value=1, max_value=8))
+    def test_trim_restores_write_capacity(self, written, keep, ps):
+        """After trimming to any kept length, the slot can always re-write
+        up to its admitted worst case (reservations were restored)."""
+        t = PagedTables(num_slots=1, num_blocks=8, num_pages=8, page_size=ps)
+        limit = min(written + 4, 8 * ps)
+        written = min(written, limit)
+        assert t.admit(0, list(range(written)), limit - written) == 0
+        t.prepare_write(0, 0, written)
+        keep = min(keep, written)
+        t.trim(0, keep)
+        t.check_invariants()
+        t.prepare_write(0, keep, limit - keep)  # must not raise OutOfPages
+        t.check_invariants()
