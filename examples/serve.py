@@ -44,6 +44,12 @@ def main():
                     help="KV-cache layout (repro.serve.kv): paged = page "
                          "pool + block tables + prefix sharing")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kv-dtype", default="", metavar="DTYPE",
+                    help="paged-pool element type (e.g. 'int8': quantized "
+                         "pages with per-row scales — about half the bytes "
+                         "per page, so a fixed HBM budget holds ~2x the "
+                         "pages; outputs are allclose to dense, not "
+                         "bit-identical). Default: the model compute dtype")
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="give every prompt the same N-token prefix; with "
                          "--cache paged, later requests map the first "
@@ -100,6 +106,7 @@ def main():
         token_budget=args.token_budget or None,
         packed=args.packed,
         cache=args.cache, page_size=args.page_size,
+        kv_dtype=args.kv_dtype or None,
         spec=spec,
     )
 

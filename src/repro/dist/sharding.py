@@ -232,6 +232,11 @@ def cache_shardings(cache: PyTree, mesh, shard_seq: bool = False) -> PyTree:
             # (…, num_pages, page_size, kv_heads, hd); group-scanned
             # leaves carry a leading n_groups dim — right-align.
             axes = (None,) * (nd - 4) + (dp, None, "model", None)
+        elif paged and name in ("k_scale", "v_scale") and nd >= 3:
+            # int8 dequant scales (…, num_pages, page_size, kv_heads):
+            # co-placed with their pools — pages over data, heads over
+            # "model" — so the kernel's per-page loads stay local.
+            axes = (None,) * (nd - 3) + (dp, None, "model")
         elif name in ("k", "v") and nd == 4:
             axes = (None, ("data",), "model", None) if shard_seq else (dp, None, "model", None)
         elif nd >= 2:

@@ -164,9 +164,13 @@ def flash_attention(
 
 
 def _paged_attn_kernel(
-    q_ref, k_ref, v_ref, tbl_ref, pos_ref, slot_ref, o_ref,
-    *, page_size, num_pages, num_blocks, window, sm_scale,
+    q_ref, k_ref, v_ref, *rest,
+    page_size, num_pages, num_blocks, window, sm_scale, softcap, quantized,
 ):
+    if quantized:
+        ks_ref, vs_ref, tbl_ref, pos_ref, slot_ref, o_ref = rest
+    else:
+        tbl_ref, pos_ref, slot_ref, o_ref = rest
     q = q_ref[...].astype(jnp.float32) * sm_scale  # (d,)
     pos = pos_ref[...]
     slot = slot_ref[...]
@@ -186,15 +190,28 @@ def _paged_attn_kernel(
     def body(bi, carry):
         acc, m_prev, l_prev = carry
         page = tbl_ref[slot_s, bi]
-        ok = page < num_pages  # unallocated-block sentinel
-        page_s = jnp.minimum(page, num_pages - 1)
+        # unallocated sentinel (num_pages) AND hostile negatives: a bad
+        # table entry may only redirect the read to a masked tile, never
+        # wrap around into another slot's pages
+        ok = (page >= 0) & (page < num_pages)
+        page_s = jnp.clip(page, 0, num_pages - 1)
         k_tile = pl.load(
             k_ref, (pl.dslice(page_s * page_size, page_size), slice(None))
-        )  # (page_size, d)
+        ).astype(jnp.float32)  # (page_size, d)
         v_tile = pl.load(
             v_ref, (pl.dslice(page_s * page_size, page_size), slice(None))
-        )
-        s = jnp.dot(k_tile.astype(jnp.float32), q)  # (page_size,)
+        ).astype(jnp.float32)
+        if quantized:
+            # int8 pages: dequantize per row inside the online-softmax
+            # loop (scales are per (page-row, kv-head), written at
+            # quantization time alongside the int8 rows).
+            ks = pl.load(ks_ref, (pl.dslice(page_s * page_size, page_size),))
+            vs = pl.load(vs_ref, (pl.dslice(page_s * page_size, page_size),))
+            k_tile = k_tile * ks[:, None]
+            v_tile = v_tile * vs[:, None]
+        s = jnp.dot(k_tile, q)  # (page_size,)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
         kpos = bi * page_size + jax.lax.iota(jnp.int32, page_size)
         mask = (kpos <= pos) & ok
         if window > 0:
@@ -202,9 +219,12 @@ def _paged_attn_kernel(
         s = jnp.where(mask, s, NEG_INF)
         m_cur = jnp.maximum(m_prev, jnp.max(s))
         alpha = jnp.exp(m_prev - m_cur)
-        p = jnp.exp(s - m_cur)
+        # mask p explicitly: when every position so far is masked, m_cur
+        # is still NEG_INF and exp(s - m_cur) would be 1, not 0 — a
+        # fully-masked query must come out all-zero
+        p = jnp.where(mask, jnp.exp(s - m_cur), 0.0)
         l_cur = l_prev * alpha + jnp.sum(p)
-        acc = acc * alpha + jnp.dot(p, v_tile.astype(jnp.float32))
+        acc = acc * alpha + jnp.dot(p, v_tile)
         return acc, m_cur, l_cur
 
     d = q_ref.shape[-1]
@@ -223,6 +243,9 @@ def paged_flash_attention(
     q_pos: jnp.ndarray,  # (T,) absolute position per query token
     q_slots: jnp.ndarray,  # (T,) cache slot per query token; < 0 = padding
     window: int = 0,
+    softcap: float = 0.0,
+    k_scale: jnp.ndarray = None,  # (num_pages, page_size, KV) f32, int8 pools
+    v_scale: jnp.ndarray = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Flash attention over a paged KV pool (vLLM-style paged attention).
@@ -248,12 +271,18 @@ def paged_flash_attention(
     scalar-prefetch grid spec (``pltpu.PrefetchScalarGridSpec``) DMA-ing
     pages by table entry — the known TPU follow-up.
 
-    The jnp oracle is ``repro.kernels.ref.paged_attention_ref``.
+    The jnp oracle is ``repro.kernels.ref.paged_attention_ref``; the
+    fused XLA path used off-TPU is ``paged_attention_xla`` below.
     """
     t, h, d = q.shape
     num_pages, page_size, kvh, _ = k_pool.shape
     num_slots, num_blocks = tables.shape
     g = h // kvh
+    quantized = k_scale is not None
+    if quantized != (v_scale is not None):
+        # raised, not assert-ed: a half-passed pair would silently attend
+        # over raw int8 codes for one of K/V
+        raise ValueError("pass both k_scale and v_scale, or neither")
 
     # (KV, num_pages * page_size, D): one flat row pool per KV head, so a
     # page id turns into a dslice start inside the kernel.
@@ -263,26 +292,97 @@ def paged_flash_attention(
     kernel = functools.partial(
         _paged_attn_kernel,
         page_size=page_size, num_pages=num_pages, num_blocks=num_blocks,
-        window=window, sm_scale=1.0 / math.sqrt(d),
+        window=window, sm_scale=1.0 / math.sqrt(d), softcap=softcap,
+        quantized=quantized,
     )
+    in_specs = [
+        pl.BlockSpec((None, None, d), lambda i, j: (i, j, 0)),  # q token/head
+        pl.BlockSpec((None, num_pages * page_size, d), lambda i, j, g=g: (j // g, 0, 0)),
+        pl.BlockSpec((None, num_pages * page_size, d), lambda i, j, g=g: (j // g, 0, 0)),
+    ]
+    operands = [q, kr, vr]
+    if quantized:
+        # Per-row dequant scales, flattened alongside their pools.
+        ksr = k_scale.transpose(2, 0, 1).reshape(kvh, num_pages * page_size)
+        vsr = v_scale.transpose(2, 0, 1).reshape(kvh, num_pages * page_size)
+        in_specs.append(pl.BlockSpec((None, num_pages * page_size), lambda i, j, g=g: (j // g, 0)))
+        in_specs.append(pl.BlockSpec((None, num_pages * page_size), lambda i, j, g=g: (j // g, 0)))
+        operands.append(ksr.astype(jnp.float32))
+        operands.append(vsr.astype(jnp.float32))
+    in_specs += [
+        pl.BlockSpec((num_slots, num_blocks), lambda i, j: (0, 0)),
+        pl.BlockSpec((None,), lambda i, j: (i,)),
+        pl.BlockSpec((None,), lambda i, j: (i,)),
+    ]
     out = pl.pallas_call(
         kernel,
         grid=(t, h),
-        in_specs=[
-            pl.BlockSpec((None, None, d), lambda i, j: (i, j, 0)),  # q token/head
-            pl.BlockSpec((None, num_pages * page_size, d), lambda i, j, g=g: (j // g, 0, 0)),
-            pl.BlockSpec((None, num_pages * page_size, d), lambda i, j, g=g: (j // g, 0, 0)),
-            pl.BlockSpec((num_slots, num_blocks), lambda i, j: (0, 0)),
-            pl.BlockSpec((None,), lambda i, j: (i,)),
-            pl.BlockSpec((None,), lambda i, j: (i,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, None, d), lambda i, j: (i, j, 0)),
         out_shape=jax.ShapeDtypeStruct((t, h, d), q.dtype),
         interpret=interpret,
     )(
-        q, kr, vr,
+        *operands,
         tables.astype(jnp.int32),
         q_pos.astype(jnp.int32),
         q_slots.astype(jnp.int32),
     )
     return out
+
+
+def paged_attention_xla(
+    q: jnp.ndarray,  # (T, H, D) packed query tokens
+    k_pool: jnp.ndarray,  # (num_pages, page_size, KV, D)
+    v_pool: jnp.ndarray,  # (num_pages, page_size, KV, D)
+    tables: jnp.ndarray,  # (num_slots, num_blocks) int32
+    q_pos: jnp.ndarray,  # (T,) absolute positions
+    q_slots: jnp.ndarray,  # (T,) slot per query; < 0 = padding
+    window: int = 0,
+    softcap: float = 0.0,
+    k_scale: jnp.ndarray = None,
+    v_scale: jnp.ndarray = None,
+) -> jnp.ndarray:
+    """Fused paged attention lowered through plain XLA (the non-TPU path).
+
+    Same contract as the Pallas kernel: per-token block-table walk,
+    unallocated-sentinel masking, zero rows for padding queries, optional
+    per-row int8 dequant.  It gathers only each token's *own* pages (one
+    (T, num_blocks) gather — never a whole-pool materialization), with
+    unallocated blocks masked before the softmax, so the isolation
+    guarantees match the kernel's.  On CPU this beats interpret-mode
+    Pallas by >20x at serving shapes, which is why ``ops`` dispatches
+    here off-TPU.
+    """
+    t, h, d = q.shape
+    num_pages, page_size, kvh, _ = k_pool.shape
+    nb = tables.shape[1]
+    g = h // kvh
+    valid_q = q_slots >= 0
+    pages = tables[jnp.clip(q_slots, 0, tables.shape[0] - 1)]  # (T, NB)
+    page_ok = (pages >= 0) & (pages < num_pages)  # sentinel AND negatives
+    safe = jnp.where(page_ok, pages, 0)
+    keys = k_pool[safe].astype(jnp.float32)  # (T, NB, ps, KV, D)
+    vals = v_pool[safe].astype(jnp.float32)
+    if (k_scale is not None) != (v_scale is not None):
+        raise ValueError("pass both k_scale and v_scale, or neither")
+    if k_scale is not None:
+        keys = keys * k_scale[safe][..., None]
+        vals = vals * v_scale[safe][..., None]
+    keys = keys.reshape(t, nb * page_size, kvh, d)
+    vals = vals.reshape(t, nb * page_size, kvh, d)
+    qg = q.reshape(t, kvh, g, d).astype(jnp.float32) / math.sqrt(d)
+    logits = jnp.einsum("thgd,tkhd->thgk", qg, keys)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    kpos = jnp.arange(nb * page_size)
+    mask = (kpos[None, :] <= q_pos[:, None]) & valid_q[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > q_pos[:, None] - window
+    mask &= jnp.repeat(page_ok, page_size, axis=1)
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    # re-mask after softmax: a fully-masked query (every page hostile or
+    # unallocated) must output zeros, not a uniform mix of gathered rows
+    w = jax.nn.softmax(logits, axis=-1) * mask[:, None, None, :]
+    out = jnp.einsum("thgk,tkhd->thgd", w, vals)
+    out = jnp.where(valid_q[:, None, None, None], out, 0.0)
+    return out.reshape(t, h, d).astype(q.dtype)

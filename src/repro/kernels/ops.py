@@ -12,6 +12,7 @@ import jax
 
 from .flash_attention import (
     flash_attention as _flash,
+    paged_attention_xla as _paged_xla,
     paged_flash_attention as _paged_flash,
 )
 from .masked_accum import masked_accum as _maccum, masked_accum_tree as _maccum_tree
@@ -33,13 +34,28 @@ def flash_attention(q, k, v, causal=True, window=0, block_q=128, block_k=128,
                   q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "interpret"))
 def paged_flash_attention(q, k_pool, v_pool, tables, q_pos, q_slots,
-                          window=0, interpret=None):
+                          window=0, softcap=0.0, k_scale=None, v_scale=None,
+                          interpret=None):
+    """Fused paged attention: Pallas kernel on TPU, fused XLA path elsewhere.
+
+    ``interpret=None`` (the default, what the model's paged branches pass)
+    picks the Pallas kernel on TPU and ``paged_attention_xla`` on other
+    backends — interpret-mode Pallas walks the grid serially in Python and
+    is >20x slower than the XLA lowering at serving shapes.  Pass
+    ``interpret=True`` explicitly to force the interpreted kernel (the
+    correctness path the kernel tests sweep).
+    """
     if interpret is None:
-        interpret = _default_interpret()
+        if _default_interpret():
+            return _paged_xla(q, k_pool, v_pool, tables, q_pos, q_slots,
+                              window=window, softcap=softcap,
+                              k_scale=k_scale, v_scale=v_scale)
+        interpret = False
     return _paged_flash(q, k_pool, v_pool, tables, q_pos, q_slots,
-                        window=window, interpret=interpret)
+                        window=window, softcap=softcap,
+                        k_scale=k_scale, v_scale=v_scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))

@@ -53,30 +53,43 @@ def paged_attention_ref(
     q_pos: jnp.ndarray,  # (T,) absolute positions
     q_slots: jnp.ndarray,  # (T,) slot per query; < 0 = padding
     window: int = 0,
+    softcap: float = 0.0,
+    k_scale: jnp.ndarray = None,  # (num_pages, page_size, KV) f32, int8 pools
+    v_scale: jnp.ndarray = None,
 ) -> jnp.ndarray:
     """Naive paged attention: materialize each query's logical KV buffer
     by gathering its slot's pages through the block table, then mask by
     position (causal / sliding window) and unallocated-block sentinel
-    (``tables[s, b] >= num_pages``).  Padding queries return zero rows."""
+    (``tables[s, b] >= num_pages``).  Padding queries return zero rows.
+    int8 pools pass per-row scales; rows dequantize before the softmax."""
     t, h, d = q.shape
     num_pages, page_size, kvh, _ = k_pool.shape
     nb = tables.shape[1]
     g = h // kvh
     valid_q = q_slots >= 0
     pages = tables[jnp.clip(q_slots, 0, tables.shape[0] - 1)]  # (T, NB)
-    page_ok = pages < num_pages
+    page_ok = (pages >= 0) & (pages < num_pages)  # sentinel AND negatives
     safe = jnp.clip(pages, 0, num_pages - 1)
-    keys = k_pool[safe].reshape(t, nb * page_size, kvh, d)
-    vals = v_pool[safe].reshape(t, nb * page_size, kvh, d)
+    keys = k_pool[safe].astype(jnp.float32)  # (T, NB, ps, KV, D)
+    vals = v_pool[safe].astype(jnp.float32)
+    if k_scale is not None:
+        keys = keys * k_scale[safe][..., None]
+        vals = vals * v_scale[safe][..., None]
+    keys = keys.reshape(t, nb * page_size, kvh, d)
+    vals = vals.reshape(t, nb * page_size, kvh, d)
     qg = q.reshape(t, kvh, g, d).astype(jnp.float32) / math.sqrt(d)
-    logits = jnp.einsum("thgd,tkhd->thgk", qg, keys.astype(jnp.float32))
+    logits = jnp.einsum("thgd,tkhd->thgk", qg, keys)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
     kpos = jnp.arange(nb * page_size)
     mask = (kpos[None, :] <= q_pos[:, None]) & valid_q[:, None]
     if window > 0:
         mask &= kpos[None, :] > q_pos[:, None] - window
     mask &= jnp.repeat(page_ok, page_size, axis=1)
     logits = jnp.where(mask[:, None, None, :], logits, -1e30)
-    w = jax.nn.softmax(logits, axis=-1)
+    # re-mask after softmax: a fully-masked query (every page hostile or
+    # unallocated) must output zeros, not a uniform mix of clipped rows
+    w = jax.nn.softmax(logits, axis=-1) * mask[:, None, None, :]
     out = jnp.einsum("thgk,tkhd->thgd", w, vals.astype(jnp.float32))
     out = jnp.where(valid_q[:, None, None, None], out, 0.0)
     return out.reshape(t, h, d).astype(q.dtype)

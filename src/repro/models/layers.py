@@ -15,6 +15,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ops as kernel_ops
 from .config import ModelConfig
 
 PyTree = Any
@@ -364,14 +365,79 @@ def paged_gather(pool, tables, slots):
 
     pool: (num_pages, page_size, kv, hd); tables: (num_slots, num_blocks);
     slots: (X,) int32.  Returns (X, num_blocks * page_size, kv, hd) in
-    logical-position order (pages hold contiguous positions).  Rows behind
-    unallocated blocks read clamped garbage — callers mask them (positions
-    above a slot's write cursor are never attended).
+    logical-position order (pages hold contiguous positions).  Oracle-only
+    duty since the fused ``kernels.ops.paged_flash_attention`` took over
+    the hot paths: rows behind unallocated blocks (the ``num_pages``
+    sentinel) come back as explicit zero rows, never another slot's data —
+    a hostile block table can redirect a read only to zeros, so isolation
+    does not rest on downstream position masking.
     """
     num_pages = pool.shape[0]
-    pages = jnp.clip(tables[slots], 0, num_pages - 1)  # (X, num_blocks)
-    out = pool[pages]  # (X, num_blocks, page_size, kv, hd)
+    pages = tables[slots]  # (X, num_blocks)
+    ok = (pages >= 0) & (pages < num_pages)
+    safe = jnp.where(ok, pages, 0)
+    out = jnp.where(
+        ok[..., None, None, None], pool[safe], jnp.zeros((), pool.dtype)
+    )  # (X, num_blocks, page_size, kv, hd)
     return out.reshape(out.shape[0], -1, *pool.shape[2:])
+
+
+def _paged_quantize(rows):
+    """Per-row symmetric int8 quantization for paged KV writes.
+
+    rows: (..., KV, D) in compute dtype.  Returns int8 codes of the same
+    shape plus f32 scales of shape (..., KV) — one scale per (token row,
+    kv head), so already-written pages never need requantizing when a
+    later token lands in the same page.
+    """
+    rf = rows.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(rf), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    codes = jnp.clip(jnp.round(rf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def _paged_write(cache, page, off, k_rows, v_rows):
+    """Scatter K/V rows into the paged pool at ``(page, off)``.
+
+    ``page``/``off`` index arrays of shape S; ``k_rows``/``v_rows`` are
+    (S..., KV, D).  Out-of-range pages (the unallocated sentinel from
+    ``paged_index``) are dropped.  int8 pools (marked by the presence of
+    ``k_scale``/``v_scale`` leaves) quantize each row and scatter its
+    scale alongside.
+    """
+    new = dict(cache)
+    if "k_scale" in cache:
+        kq, ks = _paged_quantize(k_rows)
+        vq, vs = _paged_quantize(v_rows)
+        new["k"] = cache["k"].at[page, off].set(kq, mode="drop")
+        new["v"] = cache["v"].at[page, off].set(vq, mode="drop")
+        new["k_scale"] = cache["k_scale"].at[page, off].set(ks, mode="drop")
+        new["v_scale"] = cache["v_scale"].at[page, off].set(vs, mode="drop")
+    else:
+        new["k"] = cache["k"].at[page, off].set(
+            k_rows.astype(cache["k"].dtype), mode="drop"
+        )
+        new["v"] = cache["v"].at[page, off].set(
+            v_rows.astype(cache["v"].dtype), mode="drop"
+        )
+    return new
+
+
+def _paged_attend(q_tok, cache, page_tables, q_pos, q_slots, window, softcap):
+    """Fused paged attention over flattened query tokens.
+
+    q_tok: (T, H, D); returns (T, H, D).  One entry point for the decode,
+    chunked-prefill, and token-packed paged branches — they all reduce to
+    per-token ``(q_pos, q_slots)`` addressing, which is exactly the fused
+    kernel's grid.  Dispatch (Pallas on TPU, fused XLA elsewhere) lives in
+    ``kernels.ops``.
+    """
+    return kernel_ops.paged_flash_attention(
+        q_tok, cache["k"], cache["v"], page_tables, q_pos, q_slots,
+        window=window, softcap=softcap,
+        k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"),
+    )
 
 
 def causal_mask(sq: int, sk: int, q_offset=0, window: int = 0) -> jnp.ndarray:
@@ -425,12 +491,17 @@ def apply_attention(
 
     page_tables / page_size (paged KV layout, ``repro.serve.kv``): the
     cache leaves are a flat ``(num_pages, page_size, KV, D)`` pool shared
-    by every slot instead of per-slot rows; all scatter/gather goes
-    through the layout's ``paged_index`` / ``paged_gather`` translation
-    (``(slot, pos)`` -> ``(table[slot, pos // page_size], pos % page_size)``).
-    The decode/chunked/packed semantics above are unchanged — the paged
-    layout is token-identical to the dense one; only the physical
-    addressing differs.  Paged decode needs per-slot positions.
+    by every slot instead of per-slot rows; writes go through the
+    layout's ``paged_index`` translation (``(slot, pos)`` ->
+    ``(table[slot, pos // page_size], pos % page_size)``) and reads
+    through the fused ``kernels.ops.paged_flash_attention`` block-table
+    walk (no whole-buffer materialization).  int8 pools carry
+    ``k_scale``/``v_scale`` leaves: rows quantize at write time and
+    dequantize inside the kernel's online-softmax loop.  The
+    decode/chunked/packed semantics above are unchanged — the paged
+    layout is token-identical to the dense one (int8 is allclose, not
+    bit-identical); only the physical addressing differs.  Paged decode
+    needs per-slot positions.
     """
     cd = cfg.compute_dtype
     window = cfg.sliding_window if kind == "L" else 0
@@ -476,16 +547,18 @@ def apply_attention(
         slot_safe = jnp.where(valid, slots, 0)
         wp = jnp.where(valid, pos, buf_len)  # OOB => dropped by scatter
         if page_tables is not None:
+            # Fused path: scatter this step's rows, then one kernel call
+            # over the packed tokens — each query walks its own slot's
+            # block table, so cost tracks granted tokens, not pool size,
+            # and the segment mask is structural (cross-slot pages are
+            # never read).  Padding tokens (slot < 0) return zero rows.
             num_pages = cache["k"].shape[0]
             page, off = paged_index(page_tables, slot_safe, wp, page_size, num_pages)
-            ck = cache["k"].at[page, off].set(
-                k[0].astype(cache["k"].dtype), mode="drop"
-            )
-            cv = cache["v"].at[page, off].set(
-                v[0].astype(cache["v"].dtype), mode="drop"
-            )
-            kk = paged_gather(ck, page_tables, slot_safe)  # (P, L, KV, D)
-            vv = paged_gather(cv, page_tables, slot_safe)
+            cache = _paged_write(cache, page, off, k[0], v[0])
+            out = _paged_attend(
+                q[0], cache, page_tables, pos, slots, window, cfg.logit_softcap
+            )  # (P, H, D)
+            out = out[None]  # back to (1, P, H, D)
         else:
             ck = cache["k"].at[slot_safe, wp].set(
                 k[0].astype(cache["k"].dtype), mode="drop"
@@ -495,16 +568,16 @@ def apply_attention(
             )
             kk = jnp.take(ck, slot_safe, axis=0)  # (P, L, KV, D)
             vv = jnp.take(cv, slot_safe, axis=0)
-        kpos_idx = jnp.arange(buf_len)
-        m = (kpos_idx[None, :] <= pos[:, None]) & valid[:, None]
-        if window > 0:
-            m &= kpos_idx[None, :] > pos[:, None] - window
-        out = sdpa(
-            q[0][:, None], kk.astype(cd), vv.astype(cd),
-            m[:, None, None, :], cfg.logit_softcap,
-        )  # (P, 1, H, D)
-        out = out[:, 0][None]  # back to (1, P, H, D)
-        cache = {"k": ck, "v": cv}
+            kpos_idx = jnp.arange(buf_len)
+            m = (kpos_idx[None, :] <= pos[:, None]) & valid[:, None]
+            if window > 0:
+                m &= kpos_idx[None, :] > pos[:, None] - window
+            out = sdpa(
+                q[0][:, None], kk.astype(cd), vv.astype(cd),
+                m[:, None, None, :], cfg.logit_softcap,
+            )  # (P, 1, H, D)
+            out = out[:, 0][None]  # back to (1, P, H, D)
+            cache = {"k": ck, "v": cv}
     elif cache is None:
         sq = x.shape[1]
         q, k, v, real_h = _pad_heads_for_tp(q, k, v)
@@ -549,43 +622,44 @@ def apply_attention(
         wp = jnp.where(active, qpos, buf_len)  # OOB => dropped by scatter
         bidx = jnp.arange(b)[:, None]
         if page_tables is not None:
+            # Fused path: flatten the (B, C) chunk to B*C packed tokens
+            # (inactive columns become padding queries) — the same
+            # per-token (q_pos, q_slots) grid the packed step uses, so
+            # chunked prefill and speculative verify fuse for free.
             num_pages = cache["k"].shape[0]
             page, off = paged_index(page_tables, bidx, wp, page_size, num_pages)
-            ck = cache["k"].at[page, off].set(k.astype(cache["k"].dtype), mode="drop")
-            cv = cache["v"].at[page, off].set(v.astype(cache["v"].dtype), mode="drop")
-            kk = paged_gather(ck, page_tables, jnp.arange(b))  # (B, L, KV, D)
-            vv = paged_gather(cv, page_tables, jnp.arange(b))
+            cache = _paged_write(cache, page, off, k, v)
+            h = q.shape[2]
+            q_slots = jnp.where(active, bidx, -1).reshape(-1)  # (B*C,)
+            out = _paged_attend(
+                q.reshape(b * c, h, -1), cache, page_tables,
+                qpos.reshape(-1), q_slots, window, cfg.logit_softcap,
+            ).reshape(b, c, h, -1)
         else:
             ck = cache["k"].at[bidx, wp].set(k.astype(cache["k"].dtype), mode="drop")
             cv = cache["v"].at[bidx, wp].set(v.astype(cache["v"].dtype), mode="drop")
-            kk, vv = ck, cv
-        kpos_idx = jnp.arange(buf_len)
-        valid = kpos_idx[None, None, :] <= qpos[..., None]  # (B, C, L)
-        if window > 0:
-            valid &= kpos_idx[None, None, :] > qpos[..., None] - window
-        out = sdpa(q, kk.astype(cd), vv.astype(cd), valid[:, None], cfg.logit_softcap)
-        cache = {"k": ck, "v": cv}
+            kpos_idx = jnp.arange(buf_len)
+            valid = kpos_idx[None, None, :] <= qpos[..., None]  # (B, C, L)
+            if window > 0:
+                valid &= kpos_idx[None, None, :] > qpos[..., None] - window
+            out = sdpa(q, ck.astype(cd), cv.astype(cd), valid[:, None], cfg.logit_softcap)
+            cache = {"k": ck, "v": cv}
     elif page_tables is not None:
         # Paged decode: one token per slot, addressed through the block
-        # table.  Linear semantics (the window is enforced by the mask),
-        # so no ring-position reconstruction is needed.
+        # table.  Linear semantics (the window is enforced inside the
+        # fused kernel), so no ring-position reconstruction is needed.
+        # Each slot's query walks only its own admissible pages — decode
+        # cost is proportional to its sequence length, not the pool.
         pos = jnp.asarray(decode_pos)
         if pos.ndim == 0:
             raise ValueError("paged decode needs per-slot positions, got a scalar")
-        buf_len = page_tables.shape[-1] * page_size
         num_pages = cache["k"].shape[0]
         bidx = jnp.arange(q.shape[0])
         page, off = paged_index(page_tables, bidx, pos, page_size, num_pages)
-        ck = cache["k"].at[page, off].set(k[:, 0].astype(cache["k"].dtype), mode="drop")
-        cv = cache["v"].at[page, off].set(v[:, 0].astype(cache["v"].dtype), mode="drop")
-        kk = paged_gather(ck, page_tables, bidx)  # (B, L, KV, D)
-        vv = paged_gather(cv, page_tables, bidx)
-        kpos_idx = jnp.arange(buf_len)
-        valid = kpos_idx[None, :] <= pos[:, None]
-        if window > 0:
-            valid &= kpos_idx[None, :] > pos[:, None] - window
-        out = sdpa(q, kk.astype(cd), vv.astype(cd), valid[:, None, None, :], cfg.logit_softcap)
-        cache = {"k": ck, "v": cv}
+        cache = _paged_write(cache, page, off, k[:, 0], v[:, 0])
+        out = _paged_attend(
+            q[:, 0], cache, page_tables, pos, bidx, window, cfg.logit_softcap
+        )[:, None]  # (B, 1, H, D)
     else:
         # Decode: write K/V at cache position, attend over the buffer.
         # decode_pos is a scalar (lockstep batch) or (B,) per-slot vector

@@ -77,6 +77,7 @@ class PagedTables:
         self.ref = [0] * num_pages
         self._free: List[int] = list(range(num_pages - 1, -1, -1))  # pop() -> 0, 1, ...
         self._cached: "OrderedDict[int, ChainKey]" = OrderedDict()  # ref==0, retained
+        self._touched: set = set()  # allocated since the last rebaseline
         self._prefix: Dict[ChainKey, int] = {}  # chain-key id -> page
         self._page_key: Dict[int, ChainKey] = {}  # registered page -> chain-key id
         self._reserved = [0] * num_slots
@@ -109,8 +110,16 @@ class PagedTables:
 
     @property
     def touched_pages(self) -> int:
-        """Pages ever drawn from the free list and still holding content."""
-        return self.num_pages - len(self._free)
+        """Pages drawn from the free list since the last
+        ``reset_touched`` and still holding content."""
+        return len(self._touched)
+
+    def reset_touched(self) -> None:
+        """Rebaseline the touched-page counter without dropping live or
+        prefix-cached pages: subsequent ``touched_pages`` reads count only
+        pages allocated after this call (a warmed-up engine's measured run
+        records its own page traffic, not the warmup's)."""
+        self._touched.clear()
 
     def available(self) -> int:
         """Pages an ``admit`` may still promise without starving existing
@@ -253,6 +262,7 @@ class PagedTables:
                 f"{self.used_pages} in use)"
             )
         self.ref[page] = 1
+        self._touched.add(page)
         if consume_reservation and self._reserved[slot] > 0:
             self._reserved[slot] -= 1
         return page
@@ -310,6 +320,7 @@ class PagedTables:
                 self._cached[page] = key  # retain for prefix reuse
             else:
                 self._free.append(page)
+                self._touched.discard(page)
 
     def free_slot(self, slot: int) -> None:
         for page in self.tables[slot]:
@@ -390,3 +401,5 @@ class PagedTables:
                 raise PageError(f"prefix entry {key!r} -> {page} not back-linked")
         if any(r < 0 for r in self._reserved):
             raise PageError("negative reservation")
+        if self._touched & free:
+            raise PageError(f"touched pages on the free list: {self._touched & free}")

@@ -91,18 +91,26 @@ jax.tree_util.register_pytree_with_keys(
 def copy_pages_state(state: KVState, ops: Sequence[Tuple[int, int]]) -> KVState:
     """Apply ``(src, dst)`` page copies to every pool leaf (the device half
     of copy-on-write).  Group-scanned leaves carry a leading ``n_groups``
-    dim; the page axis is right-aligned at rank 4."""
+    dim ahead of the page axis — decided by tree path (``"groups"``), not
+    rank, because int8 pools add per-row scale leaves whose rank collides
+    with the un-grouped k/v pools."""
     if not ops:
         return state
     src = jnp.asarray([s for s, _ in ops], jnp.int32)
     dst = jnp.asarray([d for _, d in ops], jnp.int32)
 
-    def leaf(x):
-        if x.ndim == 5:  # (n_groups, num_pages, page_size, kv, hd)
+    def leaf(path, x):
+        grouped = any(
+            isinstance(e, jax.tree_util.DictKey) and e.key == "groups"
+            for e in path
+        )
+        if grouped:  # (n_groups, num_pages, ...)
             return x.at[:, dst].set(x[:, src])
-        return x.at[dst].set(x[src])  # (num_pages, page_size, kv, hd)
+        return x.at[dst].set(x[src])  # (num_pages, ...)
 
-    return dataclasses.replace(state, data=jax.tree.map(leaf, state.data))
+    return dataclasses.replace(
+        state, data=jax.tree_util.tree_map_with_path(leaf, state.data)
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -145,10 +153,18 @@ class Paged:
         require_chunkable(cfg, "the paged KV layout")
         num_pages, ps = spec.resolve_pages(cfg), spec.page_size
         kv, hd = cfg.n_kv_heads, cfg.hd
+        dtype = spec.resolved_kv_dtype(cfg)
 
         def one_layer():
-            z = jnp.zeros((num_pages, ps, kv, hd), cfg.compute_dtype)
-            return {"attn": {"k": z, "v": z + 0}}
+            z = jnp.zeros((num_pages, ps, kv, hd), dtype)
+            layer = {"attn": {"k": z, "v": z + 0}}
+            if spec.kv_dtype == "int8":
+                # per-row dequant scales (1.0 = the all-zero pool rows'
+                # identity scale, matching the write path's convention)
+                s = jnp.ones((num_pages, ps, kv), jnp.float32)
+                layer["attn"]["k_scale"] = s
+                layer["attn"]["v_scale"] = s + 0
+            return layer
 
         unit, n_groups, tail = _unit_and_groups(cfg)
         groups = tuple(
@@ -181,6 +197,12 @@ class KVCacheSpec:
     num_pages: pool size; ``None`` = worst-case provisioning
         (``num_slots * blocks_per_slot`` — parity-safe; size it smaller to
         oversubscribe on the actual-token distribution, which is the point).
+    kv_dtype: pool element type (paged only).  ``None`` = the model's
+        compute dtype (bit-identical to dense).  ``"int8"`` = quantized
+        pages with per-row f32 scales — roughly half the bytes per page,
+        so a fixed HBM budget holds ~2x the pages, and page count is the
+        concurrency ceiling.  Any other float dtype string (e.g.
+        ``"bfloat16"``) stores pages in that dtype unscaled.
     """
 
     num_slots: int
@@ -188,11 +210,17 @@ class KVCacheSpec:
     layout: str = "dense"
     page_size: int = 16
     num_pages: Optional[int] = None
+    kv_dtype: Optional[str] = None
 
     def __post_init__(self):
         if self.layout not in _LAYOUTS:
             raise ValueError(f"unknown KV layout {self.layout!r}; want dense|paged")
         assert self.num_slots >= 1 and self.max_len >= 1 and self.page_size >= 1
+        if self.kv_dtype is not None:
+            if self.layout != "paged":
+                raise ValueError("kv_dtype is a paged-layout knob; dense slots "
+                                 "always use the compute dtype")
+            jnp.zeros((), self.kv_dtype)  # raises on unknown dtype strings
 
     @property
     def layout_cls(self):
@@ -215,16 +243,33 @@ class KVCacheSpec:
             return self.num_pages
         return self.num_slots * self.blocks_per_slot(cfg)
 
+    def resolved_kv_dtype(self, cfg):
+        return self.kv_dtype if self.kv_dtype is not None else cfg.compute_dtype
+
+    def bytes_per_token(self, cfg) -> int:
+        """Pool bytes one cached token costs across all attention layers
+        (k + v rows, plus the per-row f32 scales for int8 pages)."""
+        itemsize = jnp.zeros((), self.resolved_kv_dtype(cfg)).dtype.itemsize
+        per_tok = 2 * cfg.n_kv_heads * cfg.hd * itemsize  # k + v
+        if self.kv_dtype == "int8":
+            per_tok += 2 * cfg.n_kv_heads * 4  # k_scale + v_scale rows
+        n_attn = sum(1 for k in cfg.pattern if k in "GLB")
+        return per_tok * n_attn
+
+    def bytes_per_page(self, cfg) -> int:
+        return self.page_size * self.bytes_per_token(cfg)
+
+    def pages_for_bytes(self, cfg, budget_bytes: int) -> int:
+        """Pages a fixed HBM budget buys under this spec's dtype — the
+        admission ceiling.  int8 pages cost roughly half the bytes of
+        bf16 ones, so the same budget admits ~2x the requests."""
+        return budget_bytes // self.bytes_per_page(cfg)
+
     def memory_bytes(self, cfg) -> int:
         """Cache bytes this spec allocates (all layers)."""
-        per_tok = 2 * cfg.n_kv_heads * cfg.hd  # k + v
-        itemsize = jnp.zeros((), cfg.compute_dtype).dtype.itemsize
-        n_attn = sum(1 for k in cfg.pattern if k in "GLB")
         if self.layout == "paged":
-            rows = self.resolve_pages(cfg) * self.page_size
-        else:
-            rows = self.num_slots * self.buffer_len(cfg)
-        return rows * per_tok * itemsize * n_attn
+            return self.resolve_pages(cfg) * self.bytes_per_page(cfg)
+        return self.num_slots * self.buffer_len(cfg) * self.bytes_per_token(cfg)
 
     def build(self, params: PyTree, cfg) -> "KVCache":
         return KVCache(self, params, cfg)
@@ -299,6 +344,14 @@ class KVCache:
         rebuilds and uploads them (no-op for dense)."""
         if self.tables is not None:
             self._dirty = True
+
+    def reset_accounting(self) -> None:
+        """Rebaseline the page-usage counters (``touched_pages``) without
+        dropping live or prefix-cached pages — what ``reset_stats`` calls
+        so a warmed-up engine records only post-reset page traffic
+        (no-op for dense)."""
+        if self.tables is not None:
+            self.tables.reset_touched()
 
     # -- mutators (no-ops for DenseSlots) -----------------------------------
 

@@ -211,6 +211,12 @@ class ContinuousBatcher:
         prefix reuse until the pool needs them back).
       page_size / num_pages: paged-layout knobs (tokens per page; pool
         size, default worst-case ``batch_slots * blocks_per_slot``).
+      kv_dtype: paged pool element dtype (``KVCacheSpec.kv_dtype``).
+        None = the compute dtype (bit-identical to dense); "int8" =
+        quantized pages with per-row scales, ~half the bytes per page so
+        the same HBM admits ~2x the pages (outputs are allclose to the
+        oracle, not bit-identical).  Ignored when ``cache`` is already a
+        ``KVCacheSpec``.
       spec: speculative decoding — a ``repro.serve.spec.SpecConfig`` (or a
         bare ``Proposer``, wrapped with the default ``k``).  Decode slots
         then verify up to ``k`` proposed tokens per step in one chunked
@@ -243,6 +249,7 @@ class ContinuousBatcher:
         cache: "str | KVCacheSpec" = "dense",
         page_size: int = 16,
         num_pages: Optional[int] = None,
+        kv_dtype: Optional[str] = None,
         spec: "Optional[SpecConfig | Proposer]" = None,
         dist=None,
     ):
@@ -271,7 +278,7 @@ class ContinuousBatcher:
         else:
             kv_spec = KVCacheSpec(
                 num_slots=batch_slots, max_len=max_len, layout=cache,
-                page_size=page_size, num_pages=num_pages,
+                page_size=page_size, num_pages=num_pages, kv_dtype=kv_dtype,
             )
         if packed and dist is not None:
             raise UnsupportedDistError(
@@ -293,6 +300,12 @@ class ContinuousBatcher:
             )
             if packed else None
         )
+        # Second, smaller packed program for pure-decode steps (every
+        # grant a single token, no drafts): capacity = batch_slots, so a
+        # decode step's FFN/unembed run over B rows instead of the mixed
+        # program's budget-sized capacity — the same two-program design
+        # as the dense engine's (B, chunk) + (B, 1) pair.
+        self.packed_decode_capacity = batch_slots if packed else None
         self.dist = dist
         if dist is not None:
             params = dist.shard(params)
@@ -542,8 +555,16 @@ class ContinuousBatcher:
         return {i: next_tok[i, : len(toks)] for i, _, toks in grants}
 
     def _run_packed(self, grants) -> Dict[int, np.ndarray]:
-        """Token-packed (capacity,) step: compute scales with grants."""
-        layout = packing.pack_step(grants, self.packed_capacity)
+        """Token-packed (capacity,) step: compute scales with grants.
+
+        Pure-decode steps (every grant one token) take the decode-sized
+        program; any prefill or draft widens a grant past one token and
+        routes to the mixed-capacity program.
+        """
+        capacity = self.packed_capacity
+        if all(len(toks) == 1 for _, _, toks in grants):
+            capacity = self.packed_decode_capacity
+        layout = packing.pack_step(grants, capacity)
         logits, self.cache = _packed_engine_step(
             self.params, self.cfg, self.cache, jnp.asarray(layout.tokens),
             jnp.asarray(layout.slot_ids), jnp.asarray(layout.positions),
@@ -621,10 +642,23 @@ class ContinuousBatcher:
                 # verify: keep the longest greedy-matching draft prefix
                 # (+ the bonus token), roll back the rejected tail's KV
                 accepted, emitted = accept_greedy(granted_draft[i], greedy[i])
+                remaining = r.max_new_tokens - len(r.output)
+                if len(emitted) > remaining:
+                    # Clamp: a request asking for N tokens must never
+                    # stream N+k (the proposer ask is clamped too, but
+                    # this is the structural guarantee — spec streams are
+                    # length-identical to greedy even against a proposer
+                    # that ignores its ask).  The clamped tail's KV is
+                    # left untrimmed: the request finishes this step and
+                    # free_slot reclaims every page.
+                    emitted = emitted[:remaining]
+                    accepted = len(emitted) - 1
+                    s.pos += 1 + accepted
+                else:
+                    s.pos += 1 + accepted
+                    if self.kv is not None and accepted < len(granted_draft[i]):
+                        self.kv.trim_slot(i, s.pos)
                 accepted_toks += accepted
-                s.pos += 1 + accepted
-                if self.kv is not None and accepted < len(granted_draft[i]):
-                    self.kv.trim_slot(i, s.pos)
             r.output.extend(emitted)
             if r.first_token_at is None:
                 r.first_token_at = now
@@ -663,8 +697,11 @@ class ContinuousBatcher:
     def reset_stats(self):
         """Clear per-step and per-request accounting (e.g. after warmup).
 
-        The KV cache is left as-is: slots are position-masked, so stale
-        rows from earlier requests are never attended.
+        The KV cache contents are left as-is: slots are position-masked,
+        so stale rows from earlier requests are never attended.  Paged
+        page-usage counters rebaseline (``KVCache.reset_accounting``) so
+        ``touched_pages`` counts only post-reset page traffic — live and
+        prefix-cached pages survive.
         """
         if self.busy:
             # raised, not assert-ed: under python -O a mid-flight reset
@@ -674,6 +711,8 @@ class ContinuousBatcher:
         self.step_stats = []
         self.finished = {}
         self._shared_step = 0  # stale counter from the last step otherwise
+        if self.kv is not None:
+            self.kv.reset_accounting()
 
     def stats_summary(self) -> Dict[str, float]:
         """Aggregate engine + latency statistics."""

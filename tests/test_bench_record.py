@@ -26,7 +26,7 @@ def record():
 class TestBenchRecord:
     def test_all_modes_present(self, record):
         modes = {r["mode"] for r in record["rows"]}
-        assert modes == {"dense", "packed", "paged", "spec"}, modes
+        assert modes == {"dense", "packed", "paged", "paged-int8", "spec"}, modes
 
     def test_rows_carry_steps_per_token(self, record):
         for r in record["rows"]:
@@ -53,3 +53,29 @@ class TestBenchRecord:
         rec = record["prefix_sharing"]
         assert rec["second_request_prefill_steps"]["shared"] < \
             rec["second_request_prefill_steps"]["disjoint"]
+
+    def test_paged_decode_step_not_regressed(self, record):
+        """The bugfix gate: with the fused paged read the paged engine's
+        pure-decode step must stay within 1.25x of dense at the largest
+        recorded budget (it was 1.77x with the gather materialization)."""
+        budgets = [r["budget"] for r in record["rows"] if r["budget"]]
+        hi = max(budgets)
+        by_mode = {r["mode"]: r for r in record["rows"] if r["budget"] == hi}
+        dense, paged = by_mode["dense"], by_mode["paged"]
+        assert math.isfinite(paged["decode_step_ms"])
+        assert paged["decode_step_ms"] <= 1.25 * dense["decode_step_ms"], (
+            f"paged decode {paged['decode_step_ms']:.2f} ms vs dense "
+            f"{dense['decode_step_ms']:.2f} ms at budget={hi}"
+        )
+
+    def test_int8_rows_and_admission_record(self, record):
+        """int8 rows carry a token-match rate (the allclose tier) and the
+        admission record shows ~2x pages at fixed pool bytes."""
+        int8_rows = [r for r in record["rows"] if r["mode"] == "paged-int8"]
+        assert int8_rows
+        for r in int8_rows:
+            assert 0.9 <= r["token_match"] <= 1.0
+        adm = record["int8_admission"]
+        assert adm["pages"]["int8"] >= 1.6 * adm["pages"]["bfloat16"]
+        assert adm["admitted_requests"]["int8"] >= \
+            adm["admitted_requests"]["bfloat16"]

@@ -231,6 +231,114 @@ class TestPagedAttention:
         )
         assert np.abs(leaky[0]).max() > 1e3
 
+    @staticmethod
+    def packed_scenario(page_size=16, kvh=2, h=4, d=16, seed=0,
+                       lens=(20, 9, 16)):
+        """Mixed-phase packed queries over one pool: slot 0 decodes (its
+        last position), slot 1 verifies (a 4-token tail), slot 2 prefills
+        (every position) — the three shapes the engine routes through the
+        one fused path."""
+        rng = np.random.default_rng(seed)
+        num_slots = len(lens)
+        nb = max(-(-n // page_size) for n in lens)
+        num_pages = num_slots * nb
+        tables = np.full((num_slots, nb), num_pages, np.int32)
+        k_pool = rng.normal(size=(num_pages, page_size, kvh, d)).astype(np.float32)
+        v_pool = rng.normal(size=(num_pages, page_size, kvh, d)).astype(np.float32)
+        for s, n in enumerate(lens):
+            for j in range(-(-n // page_size)):
+                tables[s, j] = s + j * num_slots  # interleaved ownership
+        spans = [range(lens[0] - 1, lens[0]),          # decode
+                 range(max(lens[1] - 4, 0), lens[1]),  # verify tail
+                 range(lens[2])]                       # packed prefill
+        q_pos = np.asarray([p for sp in spans for p in sp], np.int32)
+        q_slots = np.asarray(
+            [s for s, sp in enumerate(spans) for _ in sp], np.int32)
+        q = rng.normal(size=(len(q_pos), h, d)).astype(np.float32)
+        return (jnp.asarray(q), jnp.asarray(k_pool), jnp.asarray(v_pool),
+                jnp.asarray(tables), jnp.asarray(q_pos), jnp.asarray(q_slots))
+
+    @staticmethod
+    def quantize_pool(pool):
+        """Per-(token-row, kv-head) symmetric int8, the model's scheme."""
+        pool = np.asarray(pool)
+        amax = np.abs(pool).max(axis=-1)
+        scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+        codes = np.clip(np.round(pool / scale[..., None]), -127, 127)
+        return jnp.asarray(codes.astype(np.int8)), jnp.asarray(scale)
+
+    @pytest.mark.parametrize("g", [1, 2, 4])
+    @pytest.mark.parametrize("page_size", [4, 16])
+    @pytest.mark.parametrize("window", [0, 7])
+    def test_fused_matrix(self, g, page_size, window):
+        """decode/verify/packed-prefill through the fused path across GQA
+        group sizes, page sizes, and sliding windows — both the XLA
+        lowering (the off-TPU dispatch) and the interpreted kernel must
+        match the jnp oracle."""
+        kvh = 2
+        q, kp, vp, tbl, pos, slots = self.packed_scenario(
+            page_size=page_size, kvh=kvh, h=g * kvh, seed=g + page_size)
+        expect = np.asarray(ref.paged_attention_ref(
+            q, kp, vp, tbl, pos, slots, window=window))
+        xla = np.asarray(ops.paged_flash_attention(
+            q, kp, vp, tbl, pos, slots, window=window))
+        kern = np.asarray(ops.paged_flash_attention(
+            q, kp, vp, tbl, pos, slots, window=window, interpret=True))
+        np.testing.assert_allclose(xla, expect, atol=2e-5)
+        np.testing.assert_allclose(kern, expect, atol=2e-5)
+
+    def test_int8_matches_dequantized_ref(self):
+        """int8 pools + scales through both fused paths == the float ref
+        over the dequantized pools (the quantization is the only error
+        source; the attention math must be bit-for-bit the same)."""
+        q, kp, vp, tbl, pos, slots = self.packed_scenario(seed=11)
+        kq, ks = self.quantize_pool(kp)
+        vq, vs = self.quantize_pool(vp)
+        deq_k = jnp.asarray(np.asarray(kq, np.float32) * np.asarray(ks)[..., None])
+        deq_v = jnp.asarray(np.asarray(vq, np.float32) * np.asarray(vs)[..., None])
+        expect = np.asarray(ref.paged_attention_ref(
+            q, deq_k, deq_v, tbl, pos, slots))
+        for interp in (None, True):
+            out = np.asarray(ops.paged_flash_attention(
+                q, kq, vq, tbl, pos, slots, k_scale=ks, v_scale=vs,
+                interpret=interp))
+            np.testing.assert_allclose(out, expect, atol=2e-5)
+
+    def test_int8_quantization_error_bounded(self):
+        """End-to-end int8 error against the unquantized oracle stays
+        within the per-row quantization budget (~amax/127 per element)."""
+        q, kp, vp, tbl, pos, slots = self.packed_scenario(seed=12)
+        kq, ks = self.quantize_pool(kp)
+        vq, vs = self.quantize_pool(vp)
+        exact = np.asarray(ref.paged_attention_ref(q, kp, vp, tbl, pos, slots))
+        out = np.asarray(ops.paged_flash_attention(
+            q, kq, vq, tbl, pos, slots, k_scale=ks, v_scale=vs))
+        # v rows are convex-combined, so output error is bounded by the
+        # worst per-element v quantization error plus the softmax shift
+        # from the k error; normal(0,1) rows quantize at ~3sigma/127
+        np.testing.assert_allclose(out, exact, atol=0.1)
+        assert np.abs(out - exact).max() > 0  # int8 is not bit-identical
+
+    def test_int8_no_cross_page_leak(self):
+        """Poison foreign pages in the int8 pools (max code, huge scale):
+        slot 0's output must be identical to the unpoisoned run."""
+        q, kp, vp, tbl, pos, slots = self.packed_scenario(seed=13)
+        kq, ks = self.quantize_pool(kp)
+        vq, vs = self.quantize_pool(vp)
+        clean = np.asarray(ops.paged_flash_attention(
+            q, kq, vq, tbl, pos, slots, k_scale=ks, v_scale=vs,
+            interpret=True))
+        own = set(int(p) for p in np.asarray(tbl[0]) if p < kq.shape[0])
+        poison = np.asarray([p for p in range(kq.shape[0]) if p not in own])
+        vq = vq.at[poison].set(127)
+        vs = vs.at[poison].set(1e4)
+        out = np.asarray(ops.paged_flash_attention(
+            q, kq, vq, tbl, pos, slots, k_scale=ks, v_scale=vs,
+            interpret=True))
+        sel = np.asarray(slots) == 0
+        np.testing.assert_array_equal(out[sel], clean[sel])
+        assert np.abs(out[sel]).max() < 1e3, "foreign int8 pages leaked"
+
 
 class TestRmsnorm:
     @pytest.mark.parametrize("shape", [(4, 128), (3, 17, 256), (1, 1, 1024), (513, 128)])

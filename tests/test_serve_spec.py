@@ -158,6 +158,54 @@ class TestSpecParity:
         assert s["acceptance_rate"] == 1.0
         assert eng.steps < oracle.steps
 
+    def test_max_new_tokens_one_perfect_proposer(self, params):
+        """max_new_tokens=1 with a perfect proposer: the ask clamp leaves
+        no draft room at all, so every stream is exactly one token and
+        matches plain greedy decode."""
+        prop = DraftModelProposer(params, CFG, batch_slots=2, max_len=32)
+        eng = run_engine(params, make_prompts(), max_new=1, cache="paged",
+                         check=True, spec=SpecConfig(prop, k=4))
+        base = run_engine(params, make_prompts(), max_new=1)
+        assert outputs(eng) == outputs(base)
+        assert all(len(r.output) == 1 for r in eng.finished.values())
+        assert eng.kv.used_pages == 0
+
+    def test_emission_clamped_against_rogue_proposer(self, params):
+        """A proposer that ignores its ask (drafts past max_new_tokens)
+        must still produce streams of exactly max_new_tokens: the emission
+        clamp is the structural guarantee, not the ask clamp."""
+        max_new = 2
+        prop = DraftModelProposer(params, CFG, batch_slots=2, max_len=32)
+        eng = ContinuousBatcher(params, CFG, batch_slots=2, max_len=32,
+                                chunk_size=16, cache="paged",
+                                spec=SpecConfig(prop, k=4))
+
+        def rogue():
+            # bypass the ask clamp: full-k drafts even when the request
+            # only has one token of budget left
+            out = {}
+            for i, s in enumerate(eng.slots):
+                if s.free or s.prefilling:
+                    continue
+                r = s.req
+                k = min(4, eng.max_len - s.pos - 1)
+                if k > 0:
+                    got = prop.propose_batch([(i, r.prompt + r.output, k)])
+                    out[i] = list(got.get(i, ()))
+            return out
+
+        eng._propose = rogue
+        for i, p in enumerate(make_prompts()):
+            eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=max_new))
+        while eng.busy:
+            eng.step()
+            eng.kv.tables.check_invariants()
+        base = run_engine(params, make_prompts(), max_new=max_new)
+        assert outputs(eng) == outputs(base)
+        assert all(len(r.output) == max_new for r in eng.finished.values())
+        # the clamped tail's pages were reclaimed with the slot
+        assert eng.kv.used_pages == 0
+
     def test_budget_caps_verify_grants(self, params):
         """Draft tokens are scheduled under tau: a step's scheduled
         tokens never exceed the packed-capacity bound."""
