@@ -1,4 +1,12 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+Besides the results-directory plumbing, this module owns the **seeded
+serving workload generators** every serving benchmark and example draws
+requests from (``make_requests`` / ``mixed_requests``).  One generator,
+one seed convention: the same ``(n, prompt_len, new_tokens, vocab,
+seed)`` always produces token-identical request sets, so A/B comparisons
+across engines — and across PRs — replay the exact same workload.
+"""
 from __future__ import annotations
 
 import csv
@@ -7,6 +15,8 @@ import os
 import time
 from pathlib import Path
 from typing import Dict, Iterable, List
+
+import numpy as np
 
 RESULTS = Path(__file__).resolve().parent / "results"
 
@@ -40,3 +50,52 @@ class Timer:
 
     def __exit__(self, *a):
         self.seconds = time.perf_counter() - self.t0
+
+
+# ---------------------------------------------------------------------------
+# Seeded serving workloads (shared by benchmarks/, examples/, tests/)
+# ---------------------------------------------------------------------------
+
+
+def seeded_prompts(n: int, prompt_len: int, vocab: int, seed: int = 1,
+                   shared_prefix: int = 0) -> List[List[int]]:
+    """``n`` uniform-random token prompts, optionally all starting with
+    the same ``shared_prefix``-token prefix (drawn once, from the same
+    stream — the prefix-cache workloads).  Deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    n_prefix = min(shared_prefix, max(prompt_len - 1, 0))
+    prefix = rng.integers(0, vocab, size=n_prefix).tolist()
+    return [
+        prefix + rng.integers(0, vocab, size=prompt_len - n_prefix).tolist()
+        for _ in range(n)
+    ]
+
+
+def make_requests(n: int, prompt_len: int, new_tokens: int, vocab: int,
+                  seed: int = 1, shared_prefix: int = 0) -> List:
+    """Uniform-length request set (uids ``0..n-1``); the serving
+    benchmarks' default workload."""
+    from repro.serve import Request  # lazy: keep common.py jax-free
+
+    return [
+        Request(uid=i, prompt=p, max_new_tokens=new_tokens)
+        for i, p in enumerate(seeded_prompts(n, prompt_len, vocab, seed,
+                                             shared_prefix))
+    ]
+
+
+def mixed_requests(n: int, prompt_len: int, new_tokens: int, vocab: int,
+                   seed: int = 1) -> List:
+    """Alternating long/short prompts -> engine steps that carry decode
+    AND prefill work (the shapes where token packing differs from the
+    dense program)."""
+    from repro.serve import Request  # lazy: keep common.py jax-free
+
+    rng = np.random.default_rng(seed)
+    lens = [prompt_len if i % 2 else max(prompt_len // 4, 8)
+            for i in range(n)]
+    return [
+        Request(uid=i, prompt=rng.integers(0, vocab, size=m).tolist(),
+                max_new_tokens=new_tokens)
+        for i, m in enumerate(lens)
+    ]

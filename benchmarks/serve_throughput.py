@@ -37,10 +37,15 @@ benchmark trajectory across PRs.
 """
 import argparse
 import json
+import os
+import sys
 import time
 
 import jax
 import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import make_requests, mixed_requests  # noqa: E402
 
 from repro.models import ModelConfig
 from repro.models.model import init_params
@@ -93,15 +98,6 @@ def cache_stats(eng):
     return {"cache_bytes": int(sum(x.nbytes for x in leaves))}
 
 
-def make_requests(n, prompt_len, new_tokens, vocab, seed=1):
-    rng = np.random.default_rng(seed)
-    return [
-        Request(uid=i, prompt=rng.integers(0, vocab, size=prompt_len).tolist(),
-                max_new_tokens=new_tokens)
-        for i in range(n)
-    ]
-
-
 def run_once(eng, requests):
     for r in requests:
         eng.submit(r)
@@ -140,16 +136,9 @@ def bench(params, cfg, args, chunk, budget):
 
 
 def mixed_trace(args, vocab, seed=1):
-    """Mixed prompt lengths -> steps that carry decode AND prefill work
-    (the shapes where packing differs from the dense program)."""
-    rng = np.random.default_rng(seed)
-    lens = [args.prompt_len if i % 2 else max(args.prompt_len // 4, 8)
-            for i in range(args.requests)]
-    return [
-        Request(uid=i, prompt=rng.integers(0, vocab, size=n).tolist(),
-                max_new_tokens=args.new_tokens)
-        for i, n in enumerate(lens)
-    ]
+    """Seeded long/short trace (see ``common.mixed_requests``)."""
+    return mixed_requests(args.requests, args.prompt_len, args.new_tokens,
+                          vocab, seed=seed)
 
 
 def bench_modes_ab(params, cfg, args):

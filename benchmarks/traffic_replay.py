@@ -1,0 +1,390 @@
+"""Heavy-tail traffic replay through the async serving front-end.
+
+    PYTHONPATH=src python benchmarks/traffic_replay.py --requests 1000 \
+        --json BENCH_serve.json
+
+An **open-loop** workload generator — arrivals happen on their own clock,
+regardless of whether the engine keeps up, which is what real traffic
+does and what closed-loop (submit-on-completion) benchmarks structurally
+cannot show — replayed through :class:`repro.serve.AsyncEngine`:
+
+* **Poisson arrivals** at ``--rps`` (exponential inter-arrival times);
+* **Zipf-shared prompt prefixes**: each request draws one of
+  ``--prefix-groups`` prompt prefixes with Zipf(``--zipf-a``) popularity,
+  so hot prefixes recur and exercise the paged prefix cache exactly the
+  way templated production prompts do;
+* **log-normal long-tail lengths** for both prompt and output — the
+  per-request compute variance that makes tail latency, not mean
+  throughput, the binding constraint (the serving mirror of the paper's
+  per-step compute-variance argument);
+* a per-request **TTFT deadline SLO** (``--deadline``): requests whose
+  first token misses it are dropped by the front-end — slot and pages
+  reclaimed — and count against goodput, not throughput.
+
+The replay records p50/p99 TTFT (split into queue wait and post-
+admission prefill latency), time-per-output-token, and **deadline
+goodput** (requests and tokens served within SLO per wall second) as the
+``traffic`` record of ``BENCH_serve.json`` (``--json`` merges into an
+existing record file; the CI full lane regenerates it).  After the
+replay drains it asserts the paged pool leaked zero pages.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+import json
+import math
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import seeded_prompts  # noqa: E402
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficRequest:
+    """One generated arrival (everything seeded, nothing wall-clock)."""
+
+    uid: int
+    arrival_s: float  # offset from replay start
+    prompt: tuple
+    max_new_tokens: int
+    deadline_s: Optional[float]
+    group: int  # prefix-group id (-1 = no shared prefix)
+
+
+def _lognormal_lengths(rng, n, median, sigma, lo, hi):
+    return np.clip(
+        np.rint(rng.lognormal(math.log(median), sigma, size=n)), lo, hi
+    ).astype(int)
+
+
+def build_workload(
+    n_requests: int,
+    vocab: int,
+    seed: int,
+    *,
+    rps: float = 75.0,
+    zipf_a: float = 1.1,
+    prefix_groups: int = 24,
+    prefix_len: int = 64,
+    prompt_median: int = 48,
+    prompt_sigma: float = 0.6,
+    max_prompt: int = 192,
+    out_median: int = 8,
+    out_sigma: float = 0.6,
+    max_new: int = 32,
+    deadline_s: Optional[float] = 5.0,
+) -> List[TrafficRequest]:
+    """Seeded heavy-tail workload: same arguments -> token-identical
+    request set with identical arrival times (the determinism contract
+    ``tests/test_traffic_replay.py`` pins).
+
+    A request joins a Zipf-popular prefix group only when its sampled
+    prompt is strictly longer than the group prefix (the tail keeps every
+    prompt unique); shorter prompts stay disjoint (``group == -1``).
+    """
+    if prefix_len >= max_prompt:
+        raise ValueError("prefix_len must leave room for a unique tail")
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rps, size=n_requests))
+    ranks = np.arange(1, prefix_groups + 1, dtype=float)
+    popularity = ranks ** -zipf_a
+    popularity /= popularity.sum()
+    groups = rng.choice(prefix_groups, size=n_requests, p=popularity)
+    prefixes = seeded_prompts(prefix_groups, prefix_len, vocab, seed=seed + 1)
+    prompt_lens = _lognormal_lengths(
+        rng, n_requests, prompt_median, prompt_sigma, 1, max_prompt
+    )
+    out_lens = _lognormal_lengths(
+        rng, n_requests, out_median, out_sigma, 1, max_new
+    )
+    out = []
+    for i in range(n_requests):
+        plen, g = int(prompt_lens[i]), int(groups[i])
+        if plen > prefix_len:
+            tail = rng.integers(0, vocab, size=plen - prefix_len).tolist()
+            prompt = tuple(prefixes[g]) + tuple(tail)
+        else:
+            g = -1
+            prompt = tuple(rng.integers(0, vocab, size=plen).tolist())
+        out.append(
+            TrafficRequest(
+                uid=i,
+                arrival_s=float(arrivals[i]),
+                prompt=prompt,
+                max_new_tokens=int(out_lens[i]),
+                deadline_s=deadline_s,
+                group=g,
+            )
+        )
+    return out
+
+
+def _dist_ms(values: List[float]) -> Dict[str, float]:
+    if not values:
+        return {"mean": float("nan"), "p50": float("nan"), "p99": float("nan")}
+    arr = np.asarray(values) * 1e3
+    return {
+        "mean": float(arr.mean()),
+        "p50": float(np.quantile(arr, 0.50)),
+        "p99": float(np.quantile(arr, 0.99)),
+    }
+
+
+async def replay(frontend, workload: List[TrafficRequest],
+                 *, time_scale: float = 1.0) -> Dict:
+    """Open-loop replay: each request fires at its arrival time (scaled
+    by ``time_scale``) no matter how far behind the engine is.  Returns
+    the raw per-request outcomes; aggregation lives in
+    :func:`summarize`."""
+    from repro.serve import AdmissionError
+
+    t0 = time.perf_counter()
+    results = [None] * len(workload)
+
+    async def one(item: TrafficRequest):
+        delay = item.arrival_s * time_scale - (time.perf_counter() - t0)
+        if delay > 0:
+            await asyncio.sleep(delay)
+        try:
+            stream = await frontend.submit(
+                list(item.prompt), item.max_new_tokens,
+                uid=item.uid, deadline_s=item.deadline_s,
+            )
+        except AdmissionError:
+            results[item.uid] = {"status": "rejected", "tokens": 0,
+                                 "met": False, "group": item.group}
+            return
+        await stream.collect()
+        r = stream.request
+        tpot = None
+        if len(stream.tokens) > 1 and r.first_token_at is not None:
+            tpot = (r.finished_at - r.first_token_at) / (len(stream.tokens) - 1)
+        results[item.uid] = {
+            "status": stream.status,
+            "tokens": len(stream.tokens),
+            "met": stream.met_deadline and stream.status == "finished",
+            "ttft": stream.ttft,
+            "queue_wait": stream.queue_wait,
+            "admitted_ttft": r.admitted_ttft,
+            "tpot": tpot,
+            "group": item.group,
+        }
+
+    await asyncio.gather(*(one(item) for item in workload))
+    wall = time.perf_counter() - t0
+    return {"results": results, "wall_s": wall}
+
+
+def summarize(raw: Dict, workload: List[TrafficRequest], engine,
+              args) -> Dict:
+    results, wall = raw["results"], raw["wall_s"]
+    by_status: Dict[str, int] = {}
+    for r in results:
+        by_status[r["status"]] = by_status.get(r["status"], 0) + 1
+    met = [r for r in results if r["met"]]
+    finished = [r for r in results if r["status"] == "finished"]
+    summ = engine.stats_summary()
+    leaked = engine.kv.tables.used_pages if engine.kv is not None else 0
+    prompt_lens = [len(w.prompt) for w in workload]
+    out_lens = [w.max_new_tokens for w in workload]
+    return {
+        "requests": len(workload),
+        "seed": args.seed,
+        "arrival": {
+            "process": "poisson",
+            "rps": args.rps,
+            "span_s": float(workload[-1].arrival_s),
+        },
+        "prefix": {
+            "groups": args.prefix_groups,
+            "len": args.prefix_len,
+            "zipf_a": args.zipf_a,
+            "grouped_requests": sum(1 for w in workload if w.group >= 0),
+        },
+        "lengths": {
+            "prompt_p50": float(np.quantile(prompt_lens, 0.5)),
+            "prompt_p99": float(np.quantile(prompt_lens, 0.99)),
+            "output_p50": float(np.quantile(out_lens, 0.5)),
+            "output_p99": float(np.quantile(out_lens, 0.99)),
+        },
+        "deadline_s": args.deadline,
+        "outcomes": {
+            "finished": by_status.get("finished", 0),
+            "dropped": by_status.get("dropped", 0),
+            "rejected": by_status.get("rejected", 0),
+            "cancelled": by_status.get("cancelled", 0),
+        },
+        "ttft_ms": _dist_ms([r["ttft"] for r in finished
+                             if r.get("ttft") is not None]),
+        "queue_wait_ms": _dist_ms([r["queue_wait"] for r in finished
+                                   if r.get("queue_wait") is not None]),
+        "admitted_ttft_ms": _dist_ms([r["admitted_ttft"] for r in finished
+                                      if r.get("admitted_ttft") is not None]),
+        "tpot_ms": _dist_ms([r["tpot"] for r in finished
+                             if r.get("tpot") is not None]),
+        "goodput": {
+            "met_requests": len(met),
+            "met_fraction": len(met) / len(workload),
+            "met_tokens_per_s": sum(r["tokens"] for r in met) / wall,
+            "tokens_per_s": sum(r["tokens"] for r in results) / wall,
+        },
+        "wall_s": wall,
+        "engine": {
+            "mode": "packed+paged",
+            "steps": engine.steps,
+            "batch_slots": args.batch,
+            "token_budget": args.token_budget,
+            "max_queue": args.max_queue,
+            "shared_prompt_tokens": summ.get("shared_tokens", 0.0),
+            "peak_used_pages": summ.get("peak_used_pages", 0.0),
+            "mean_queued_requests": summ["mean_queued_requests"],
+        },
+        "leaked_pages": int(leaked),
+    }
+
+
+def merge_json(path: str, record: Dict) -> None:
+    """Merge the ``traffic`` record into an existing benchmark file (the
+    serve-throughput rows live there too) rather than clobbering it."""
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload["traffic"] = record
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"merged traffic record into {path}")
+
+
+def build_engine(args):
+    import jax
+
+    from repro.models import ModelConfig
+    from repro.models.model import init_params
+    from repro.serve import ContinuousBatcher
+
+    cfg = ModelConfig(name="traffic-bench", n_layers=4, d_model=128, n_heads=4,
+                      n_kv_heads=2, d_ff=256, vocab_size=1003,
+                      sliding_window=64, layer_pattern="LG", dtype="float32",
+                      remat=False)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatcher(
+        params, cfg, batch_slots=args.batch,
+        max_len=args.max_prompt + args.max_new,
+        chunk_size=args.chunk, token_budget=args.token_budget,
+        max_queue=args.max_queue, packed=True,
+        cache="paged", page_size=args.page_size,
+    )
+    return eng, cfg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=1000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rps", type=float, default=75.0,
+                    help="Poisson arrival rate (requests/second)")
+    ap.add_argument("--zipf-a", type=float, default=1.1)
+    ap.add_argument("--prefix-groups", type=int, default=24)
+    ap.add_argument("--prefix-len", type=int, default=64)
+    ap.add_argument("--prompt-median", type=int, default=48)
+    ap.add_argument("--prompt-sigma", type=float, default=0.6)
+    ap.add_argument("--max-prompt", type=int, default=192)
+    ap.add_argument("--out-median", type=int, default=8)
+    ap.add_argument("--out-sigma", type=float, default=0.6)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--deadline", type=float, default=5.0,
+                    help="per-request TTFT SLO in seconds (0 = none)")
+    ap.add_argument("--batch", type=int, default=16, help="cache slots")
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--token-budget", type=int, default=96)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-queue", type=int, default=32,
+                    help="engine admission queue bound (overflow parks in "
+                         "the front-end waiting room)")
+    ap.add_argument("--waiting-room", type=int, default=4096)
+    ap.add_argument("--queue-timeout", type=float, default=0.0,
+                    help="waiting-room admission timeout in seconds "
+                         "(0 = none)")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="stretch (>1) or compress (<1) arrival times")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge the traffic record into this benchmark "
+                         "file (e.g. BENCH_serve.json)")
+    args = ap.parse_args(argv)
+
+    eng, cfg = build_engine(args)
+    workload = build_workload(
+        args.requests, cfg.vocab_size, args.seed, rps=args.rps,
+        zipf_a=args.zipf_a, prefix_groups=args.prefix_groups,
+        prefix_len=args.prefix_len, prompt_median=args.prompt_median,
+        prompt_sigma=args.prompt_sigma, max_prompt=args.max_prompt,
+        out_median=args.out_median, out_sigma=args.out_sigma,
+        max_new=args.max_new, deadline_s=args.deadline or None,
+    )
+    n_tok = sum(len(w.prompt) + w.max_new_tokens for w in workload)
+    print(f"replaying {len(workload)} requests ({n_tok} worst-case tokens) "
+          f"at {args.rps} req/s over {workload[-1].arrival_s:.1f}s, "
+          f"deadline {args.deadline}s, {args.batch} slots")
+
+    from repro.serve import AsyncEngine
+
+    async def go():
+        fe = AsyncEngine(eng, waiting_room=args.waiting_room,
+                         queue_timeout=args.queue_timeout or None)
+        await fe.start()
+        try:
+            # warm the two packed step programs off the clock: XLA compile
+            # would otherwise land on the first unlucky requests' TTFT
+            warm = await fe.submit([1] * (args.chunk + 1), 2)
+            await warm.collect()
+            while fe.in_flight:
+                await asyncio.sleep(0.002)
+            eng.reset_stats()
+            return await replay(fe, workload, time_scale=args.time_scale)
+        finally:
+            await fe.stop(drain=True)
+
+    raw = asyncio.run(go())
+    rec = summarize(raw, workload, eng, args)
+
+    o, g, t = rec["outcomes"], rec["goodput"], rec["ttft_ms"]
+    print(f"finished {o['finished']}  dropped {o['dropped']}  "
+          f"rejected {o['rejected']}  in {rec['wall_s']:.1f}s")
+    print(f"TTFT ms: p50 {t['p50']:.0f}  p99 {t['p99']:.0f}  "
+          f"(queue-wait p99 {rec['queue_wait_ms']['p99']:.0f}, "
+          f"admitted p99 {rec['admitted_ttft_ms']['p99']:.0f})")
+    print(f"TPOT ms: p50 {rec['tpot_ms']['p50']:.1f}  "
+          f"p99 {rec['tpot_ms']['p99']:.1f}")
+    print(f"goodput: {g['met_fraction']:.1%} of requests within SLO, "
+          f"{g['met_tokens_per_s']:.0f} tok/s within-deadline "
+          f"({g['tokens_per_s']:.0f} tok/s served overall)")
+    print(f"prefix cache: {rec['engine']['shared_prompt_tokens']:.0f} prompt "
+          f"tokens served from shared pages; "
+          f"peak {rec['engine']['peak_used_pages']:.0f} pages")
+
+    if rec["leaked_pages"]:
+        raise SystemExit(
+            f"FAIL: {rec['leaked_pages']} pages still referenced after drain"
+        )
+    eng.kv.check_invariants()
+    total = sum(rec["outcomes"].values())
+    if total != len(workload):
+        raise SystemExit(
+            f"FAIL: outcome conservation: {rec['outcomes']} != {len(workload)}"
+        )
+    if args.json:
+        merge_json(args.json, rec)
+    print("PASS: replay drained, zero leaked pages, invariants clean")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

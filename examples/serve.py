@@ -12,10 +12,19 @@ never stall).  ``--chunk-size 1`` reproduces the seed token-streaming
 behaviour for comparison.
 """
 import argparse
+import os
+import sys
 import time
 
 import jax
-import numpy as np
+
+# the seeded workload helpers live with the benchmarks (one generator,
+# one seed convention — benchmarks and examples replay identical sets)
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                    os.pardir, "benchmarks")
+)
+from common import make_requests  # noqa: E402
 
 from repro.models import ModelConfig
 from repro.models.model import init_params
@@ -23,7 +32,6 @@ from repro.serve import (
     ContinuousBatcher,
     DraftModelProposer,
     NGramProposer,
-    Request,
     SpecConfig,
 )
 
@@ -110,15 +118,10 @@ def main():
         spec=spec,
     )
 
-    rng = np.random.default_rng(1)
-    n_prefix = min(args.shared_prefix, max(args.prompt_len - 1, 0))
-    prefix = rng.integers(0, cfg.vocab_size, size=n_prefix).tolist()
-    for uid in range(args.requests):
-        tail = rng.integers(
-            0, cfg.vocab_size, size=args.prompt_len - n_prefix
-        ).tolist()
-        eng.submit(Request(uid=uid, prompt=prefix + tail,
-                           max_new_tokens=args.new_tokens))
+    for req in make_requests(args.requests, args.prompt_len, args.new_tokens,
+                             cfg.vocab_size, seed=1,
+                             shared_prefix=args.shared_prefix):
+        eng.submit(req)
 
     t0 = time.time()
     done = eng.run()

@@ -1,5 +1,6 @@
 from ..models.model import UnsupportedPatternError
 from .block_table import OutOfPages, PagedTables, PageError
+from .frontend import AsyncEngine, RequestStream, StreamEvent
 from .kv import DenseSlots, KVCache, KVCacheSpec, KVState, Paged
 from .packing import PackedLayout, pack_step, packed_capacity
 from .spec import (
@@ -21,6 +22,7 @@ from .scheduler import (
 
 __all__ = [
     "AdmissionError",
+    "AsyncEngine",
     "ContinuousBatcher",
     "DenseSlots",
     "DraftModelProposer",
@@ -37,8 +39,10 @@ __all__ = [
     "PageError",
     "Proposer",
     "Request",
+    "RequestStream",
     "SpecConfig",
     "StepStats",
+    "StreamEvent",
     "UnsupportedDistError",
     "UnsupportedPatternError",
     "accept_greedy",

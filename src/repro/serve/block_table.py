@@ -323,6 +323,14 @@ class PagedTables:
                 self._touched.discard(page)
 
     def free_slot(self, slot: int) -> None:
+        """Release everything ``slot`` holds — the normal-completion path
+        and the cancellation reclaim path alike.  Works mid-prefill and
+        mid-decode: shared prefix pages survive with their other owners
+        (refcount > 0), fully-registered prompt pages drop to the
+        reclaimable prefix-cache tier (a cancelled request's prefix KV is
+        still valid for future prompts), and the partially written tail
+        page — never registered — returns straight to the free list.
+        Idempotent on an already-empty slot."""
         for page in self.tables[slot]:
             self._decref(page)
         self.tables[slot] = []

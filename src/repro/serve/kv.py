@@ -353,6 +353,15 @@ class KVCache:
         if self.tables is not None:
             self.tables.reset_touched()
 
+    def check_invariants(self) -> None:
+        """Page-accounting invariants (``PagedTables.check_invariants``;
+        no-op for dense).  An idle engine — no request holding a slot —
+        must also show ``used_pages == 0``: any still-referenced page is
+        a leak (a cancel or free path that forgot a decref).  The traffic
+        harness asserts exactly that after every replay drains."""
+        if self.tables is not None:
+            self.tables.check_invariants()
+
     # -- mutators (no-ops for DenseSlots) -----------------------------------
 
     def admit_slot(self, slot: int, prompt, max_new: int) -> Optional[int]:

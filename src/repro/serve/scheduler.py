@@ -123,8 +123,14 @@ class Request:
     #: (its slot ran out of cache positions) — surfaced instead of
     #: silently serving a truncated stream
     truncated: bool = False
+    #: aborted via ``ContinuousBatcher.cancel`` before finishing
+    cancelled: bool = False
     # --- latency accounting (filled in by the engine) ---
+    #: ``submit`` stamps this only when unset, so a front-end that held
+    #: the request in its own waiting room can pre-stamp the *original*
+    #: arrival time and TTFT keeps measuring from the user-visible submit
     submitted_at: Optional[float] = None
+    admitted_at: Optional[float] = None  # wall time the request got a slot
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     admitted_step: Optional[int] = None  # engine step the request got a slot
@@ -136,10 +142,27 @@ class Request:
 
     @property
     def ttft(self) -> Optional[float]:
-        """Time to first token (seconds), submit -> first output token."""
+        """Time to first token (seconds), submit -> first output token.
+        Includes queue wait: the clock starts when the request entered
+        the system, not when a slot freed up."""
         if self.submitted_at is None or self.first_token_at is None:
             return None
         return self.first_token_at - self.submitted_at
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        """Seconds spent waiting for a cache slot (submit -> admission)."""
+        if self.submitted_at is None or self.admitted_at is None:
+            return None
+        return self.admitted_at - self.submitted_at
+
+    @property
+    def admitted_ttft(self) -> Optional[float]:
+        """Seconds from slot admission to first output token — the
+        prefill-side half of ``ttft`` (``ttft = queue_wait + this``)."""
+        if self.admitted_at is None or self.first_token_at is None:
+            return None
+        return self.first_token_at - self.admitted_at
 
     @property
     def ttft_steps(self) -> Optional[int]:
@@ -162,6 +185,7 @@ class StepStats:
     used_pages: int = 0  # paged layout: pages referenced after this step
     draft_tokens: int = 0  # speculative draft tokens verified this step
     accepted_tokens: int = 0  # drafts the target model accepted
+    queued_requests: int = 0  # requests waiting for a slot at step start
 
     @property
     def scheduled_tokens(self) -> int:
@@ -334,12 +358,28 @@ class ContinuousBatcher:
                 self.cache = jax.jit(build, out_shardings=c_sh)()
         self.queue: List[Request] = []
         self.finished: Dict[int, Request] = {}
+        self.cancelled: Dict[int, Request] = {}
         self.steps = 0
         self.step_stats: List[StepStats] = []
         self._shared_step = 0
+        self._step_callbacks: List = []
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request):
+    def add_step_callback(self, fn) -> None:
+        """Register ``fn(stats: StepStats)`` to run at the end of every
+        engine iteration, after the step's outputs and accounting have
+        been committed.  The async front-end uses this to observe the
+        step timeline; callbacks run on whatever thread drives ``step``
+        and must not mutate engine state."""
+        self._step_callbacks.append(fn)
+
+    def validate_request(self, req: Request) -> None:
+        """Reject a request the engine can never serve — without
+        queueing it.  Raises ``InvalidRequestError`` for malformed
+        requests and ``AdmissionError`` for ones the paged pool can
+        never hold; the front-end calls this at its own submit time so
+        a doomed request fails at the caller instead of timing out in
+        the waiting room."""
         # raised, never assert-ed: under python -O an over-long request
         # would be admitted and its out-of-range scatter writes silently
         # dropped — wrong tokens served, no error anywhere
@@ -358,10 +398,6 @@ class ContinuousBatcher:
                 f"request {req.uid} too long: {len(req.prompt)} prompt + "
                 f"{req.max_new_tokens} new tokens > max_len {self.max_len}"
             )
-        if self.max_queue is not None and len(self.queue) >= self.max_queue:
-            raise AdmissionError(
-                f"queue full ({len(self.queue)}/{self.max_queue}); retry later"
-            )
         if self.kv is not None and self.kv.tables is not None:
             need = self.kv.tables.pages_required(
                 len(req.prompt), req.max_new_tokens
@@ -374,8 +410,52 @@ class ContinuousBatcher:
                     f"the pool has {self.kv.num_pages}; raise num_pages "
                     f"or split the request"
                 )
-        req.submitted_at = time.perf_counter()
+
+    def submit(self, req: Request):
+        self.validate_request(req)
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            raise AdmissionError(
+                f"queue full ({len(self.queue)}/{self.max_queue}); retry later"
+            )
+        if req.submitted_at is None:
+            # pre-stamped by front-ends that queued the request upstream:
+            # TTFT always measures from the user-visible submit
+            req.submitted_at = time.perf_counter()
         self.queue.append(req)
+
+    def cancel(self, uid: int) -> bool:
+        """Abort a request wherever it is — waiting in the queue, mid-
+        prefill, or mid-decode.  Frees the slot (and, for the paged
+        layout, decrefs every page the slot held: shared prefix pages
+        survive with their other owners, fully-registered prompt pages
+        move to the reclaimable prefix-cache tier, and the partially
+        written tail page returns to the free list).  Returns True when
+        the request was found live; a finished/unknown uid is False.
+
+        Must not be called while ``step`` is executing (the async
+        front-end serializes cancels between steps).
+        """
+        now = time.perf_counter()
+        for k, r in enumerate(self.queue):
+            if r.uid == uid:
+                self.queue.pop(k)
+                r.cancelled = True
+                r.finished_at = now
+                self.cancelled[uid] = r
+                return True
+        for i, s in enumerate(self.slots):
+            if s.req is not None and s.req.uid == uid:
+                r = s.req
+                s.req = None  # dense rows are position-masked; no scrub
+                r.cancelled = True
+                r.finished_at = now
+                self.cancelled[uid] = r
+                if self.kv is not None:
+                    self.kv.free_slot(i)
+                if self.spec is not None:
+                    self.spec.proposer.free_slot(i)
+                return True
+        return False
 
     def _dedup_inflight_prefix(self, head: Request) -> bool:
         """In-flight prefix dedup: should ``head`` stay queued because an
@@ -434,6 +514,7 @@ class ContinuousBatcher:
                 s.pos = shared
                 self._shared_step += shared
                 s.req.admitted_step = self.steps
+                s.req.admitted_at = time.perf_counter()
 
     @property
     def busy(self) -> bool:
@@ -575,6 +656,7 @@ class ContinuousBatcher:
     def step(self):
         """One engine iteration: mixed chunked-prefill + decode/verify."""
         t0 = time.perf_counter()
+        queued0 = len(self.queue)  # queue depth before this step's admission
         self._shared_step = 0
         self._admit()
         if self.kv is not None:
@@ -675,16 +757,18 @@ class ContinuousBatcher:
                 if self.spec is not None:
                     self.spec.proposer.free_slot(i)
 
-        self.step_stats.append(
-            StepStats(
-                self.steps, decode_toks, prefill_toks, deferred, now - t0,
-                shared_tokens=self._shared_step,
-                used_pages=used_pages,
-                draft_tokens=draft_toks,
-                accepted_tokens=accepted_toks,
-            )
+        stats = StepStats(
+            self.steps, decode_toks, prefill_toks, deferred, now - t0,
+            shared_tokens=self._shared_step,
+            used_pages=used_pages,
+            draft_tokens=draft_toks,
+            accepted_tokens=accepted_toks,
+            queued_requests=queued0,
         )
+        self.step_stats.append(stats)
         self.steps += 1
+        for fn in self._step_callbacks:
+            fn(stats)
 
     def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
         steps = 0
@@ -710,15 +794,34 @@ class ContinuousBatcher:
         self.steps = 0
         self.step_stats = []
         self.finished = {}
+        self.cancelled = {}
         self._shared_step = 0  # stale counter from the last step otherwise
         if self.kv is not None:
             self.kv.reset_accounting()
 
     def stats_summary(self) -> Dict[str, float]:
-        """Aggregate engine + latency statistics."""
+        """Aggregate engine + latency statistics.
+
+        TTFT is split into its two phases so queue pressure is visible:
+        ``queue_wait`` (submit -> slot admission — invisible compute-side,
+        dominated by slot contention) and ``admitted_ttft`` (admission ->
+        first token — the prefill-side latency the chunk/budget knobs
+        control).  ``ttft = queue_wait + admitted_ttft`` per request; all
+        three report mean/p50/p99.
+        """
         st = self.step_stats
         done = list(self.finished.values())
         ttfts = [r.ttft for r in done if r.ttft is not None]
+
+        def pct(values, q):
+            return float(np.quantile(values, q)) if values else float("nan")
+
+        def dist(prefix, values):
+            return {
+                f"mean_{prefix}": float(np.mean(values)) if values else float("nan"),
+                f"p50_{prefix}": pct(values, 0.50),
+                f"p99_{prefix}": pct(values, 0.99),
+            }
         paged = (
             {
                 "shared_tokens": float(sum(s.shared_tokens for s in st)),
@@ -743,6 +846,8 @@ class ContinuousBatcher:
             else {}
         )
         generated = sum(len(r.output) for r in done)
+        waits = [r.queue_wait for r in done if r.queue_wait is not None]
+        admitted = [r.admitted_ttft for r in done if r.admitted_ttft is not None]
         return {
             **paged,
             **spec,
@@ -751,14 +856,21 @@ class ContinuousBatcher:
                 self.steps / generated if generated else float("nan")
             ),
             "truncated": float(sum(r.truncated for r in done)),
+            "cancelled": float(len(self.cancelled)),
             "steps": float(self.steps),
             "max_step_tokens": float(max((s.scheduled_tokens for s in st), default=0)),
             "mean_step_tokens": float(
                 np.mean([s.scheduled_tokens for s in st]) if st else 0.0
             ),
+            "mean_queued_requests": float(
+                np.mean([s.queued_requests for s in st]) if st else 0.0
+            ),
             "deferred_tokens": float(sum(s.deferred_tokens for s in st)),
             "max_step_wall": float(max((s.wall_time for s in st), default=0.0)),
             "finished": float(len(done)),
             "mean_ttft": float(np.mean(ttfts)) if ttfts else float("nan"),
-            "p99_ttft": float(np.quantile(ttfts, 0.99)) if ttfts else float("nan"),
+            "p50_ttft": pct(ttfts, 0.50),
+            "p99_ttft": pct(ttfts, 0.99),
+            **dist("queue_wait", waits),
+            **dist("admitted_ttft", admitted),
         }

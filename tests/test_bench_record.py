@@ -68,6 +68,26 @@ class TestBenchRecord:
             f"{dense['decode_step_ms']:.2f} ms at budget={hi}"
         )
 
+    def test_traffic_record_present(self, record):
+        """The open-loop traffic replay record (``traffic_replay.py``):
+        >= 1000 requests through the async front-end, tail-latency
+        percentiles split queue-wait vs post-admission, deadline goodput
+        accounted, and zero leaked pages after drain."""
+        rec = record["traffic"]
+        assert rec["requests"] >= 1000
+        assert sum(rec["outcomes"].values()) == rec["requests"]
+        assert rec["arrival"]["process"] == "poisson"
+        for dist in ("ttft_ms", "queue_wait_ms", "admitted_ttft_ms",
+                     "tpot_ms"):
+            assert rec[dist]["p50"] <= rec[dist]["p99"], dist
+            assert math.isfinite(rec[dist]["p99"]), dist
+        good = rec["goodput"]
+        assert 0.0 <= good["met_fraction"] <= 1.0
+        assert good["met_tokens_per_s"] <= good["tokens_per_s"]
+        assert rec["prefix"]["grouped_requests"] > 0
+        assert rec["engine"]["shared_prompt_tokens"] > 0  # Zipf prefixes hit
+        assert rec["leaked_pages"] == 0
+
     def test_int8_rows_and_admission_record(self, record):
         """int8 rows carry a token-match rate (the allclose tier) and the
         admission record shows ~2x pages at fixed pool bytes."""

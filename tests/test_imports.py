@@ -50,22 +50,19 @@ def test_every_repro_module_imports():
     assert f"OK {len(names)}" in out.stdout
 
 
-def test_launch_mesh_shim_warns_and_reexports():
-    """``repro.launch.mesh`` is a deprecated re-export of
-    ``repro.dist.mesh``: importing it must raise DeprecationWarning and
-    the shimmed symbols must be the same objects (in a subprocess — the
-    warning fires at first import only)."""
+def test_launch_mesh_shim_is_gone():
+    """The deprecated ``repro.launch.mesh`` re-export shim has been
+    removed (it spent one release cycle warning): importing it must fail
+    cleanly while the real module, ``repro.dist.mesh``, keeps working."""
     code = (
-        "import warnings\n"
-        "with warnings.catch_warnings(record=True) as w:\n"
-        "    warnings.simplefilter('always')\n"
-        "    import repro.launch.mesh as shim\n"
-        "assert any(issubclass(x.category, DeprecationWarning) for x in w), \\\n"
-        "    [str(x.message) for x in w]\n"
-        "import repro.dist.mesh as real\n"
-        "for name in shim.__all__:\n"
-        "    assert getattr(shim, name) is getattr(real, name), name\n"
-        "print('SHIM OK')\n"
+        "try:\n"
+        "    import repro.launch.mesh\n"
+        "except ModuleNotFoundError:\n"
+        "    pass\n"
+        "else:\n"
+        "    raise AssertionError('repro.launch.mesh still importable')\n"
+        "import repro.dist.mesh\n"
+        "print('SHIM GONE')\n"
     )
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
@@ -74,4 +71,4 @@ def test_launch_mesh_shim_warns_and_reexports():
         env=env, timeout=120,
     )
     assert out.returncode == 0, out.stderr[-3000:]
-    assert "SHIM OK" in out.stdout
+    assert "SHIM GONE" in out.stdout

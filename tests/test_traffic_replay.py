@@ -1,0 +1,145 @@
+"""Traffic-replay harness: seeded workload determinism, distribution
+shape, and a small end-to-end replay (the tier-1 smoke behind the CI
+``traffic`` record).
+
+Determinism is the contract that makes the benchmark a regression
+signal: the same ``(args, seed)`` must produce token-identical request
+sets with identical arrival times, across processes and PRs.  The same
+holds for the shared ``benchmarks/common.py`` generators every serving
+benchmark and example draws from.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(__file__), os.pardir, "benchmarks")
+)
+import common  # noqa: E402
+import traffic_replay  # noqa: E402
+
+VOCAB = 1003
+
+
+def small_workload(seed=5, n=200):
+    return traffic_replay.build_workload(
+        n, VOCAB, seed, rps=100.0, prefix_groups=8, prefix_len=16,
+        prompt_median=24, max_prompt=64, out_median=6, max_new=16,
+        deadline_s=2.0,
+    )
+
+
+class TestWorkloadGeneration:
+    def test_same_seed_same_workload(self):
+        assert small_workload() == small_workload()
+
+    def test_different_seed_differs(self):
+        a, b = small_workload(seed=5), small_workload(seed=6)
+        assert [w.prompt for w in a] != [w.prompt for w in b]
+        assert [w.arrival_s for w in a] != [w.arrival_s for w in b]
+
+    def test_shape_and_bounds(self):
+        wl = small_workload()
+        assert len(wl) == 200
+        arrivals = [w.arrival_s for w in wl]
+        assert arrivals == sorted(arrivals) and arrivals[0] >= 0
+        for w in wl:
+            assert 1 <= len(w.prompt) <= 64
+            assert 1 <= w.max_new_tokens <= 16
+            assert all(0 <= t < VOCAB for t in w.prompt)
+            assert w.deadline_s == 2.0
+
+    def test_zipf_prefix_sharing(self):
+        """Grouped requests literally share the group's prefix tokens,
+        and the Zipf skew makes low ranks strictly more popular in
+        aggregate than high ranks."""
+        wl = small_workload(n=400)
+        grouped = [w for w in wl if w.group >= 0]
+        assert grouped  # median prompt (24) > prefix_len (16)
+        by_group = {}
+        for w in grouped:
+            assert len(w.prompt) > 16
+            by_group.setdefault(w.group, []).append(w.prompt[:16])
+        for members in by_group.values():
+            assert len(set(members)) == 1  # identical prefix within a group
+        counts = [len(by_group.get(g, [])) for g in range(8)]
+        assert sum(counts[:4]) > sum(counts[4:])  # popularity skew
+        # ungrouped = short prompts, disjoint by construction
+        for w in wl:
+            if w.group == -1:
+                assert len(w.prompt) <= 16
+
+    def test_rejects_degenerate_prefix(self):
+        with pytest.raises(ValueError, match="prefix_len"):
+            traffic_replay.build_workload(10, VOCAB, 0, prefix_len=64,
+                                          max_prompt=64)
+
+
+class TestCommonGenerators:
+    def test_make_requests_deterministic(self):
+        a = common.make_requests(8, 16, 4, VOCAB, seed=3, shared_prefix=4)
+        b = common.make_requests(8, 16, 4, VOCAB, seed=3, shared_prefix=4)
+        assert [r.prompt for r in a] == [r.prompt for r in b]
+        assert [r.uid for r in a] == list(range(8))
+        assert all(r.prompt[:4] == a[0].prompt[:4] for r in a)
+        c = common.make_requests(8, 16, 4, VOCAB, seed=4, shared_prefix=4)
+        assert [r.prompt for r in a] != [r.prompt for r in c]
+
+    def test_mixed_requests_deterministic(self):
+        a = common.mixed_requests(6, 32, 4, VOCAB, seed=2)
+        b = common.mixed_requests(6, 32, 4, VOCAB, seed=2)
+        assert [r.prompt for r in a] == [r.prompt for r in b]
+        lens = [len(r.prompt) for r in a]
+        assert lens == [8, 32, 8, 32, 8, 32]  # alternating short/long
+
+    def test_seeded_prompts_prefix_draw_order(self):
+        """shared_prefix=0 must consume nothing from the stream — the
+        pre-refactor inline generators drew exactly this way, and the
+        committed benchmark history replays their workloads."""
+        plain = common.seeded_prompts(4, 12, VOCAB, seed=9)
+        with_zero = common.seeded_prompts(4, 12, VOCAB, seed=9,
+                                          shared_prefix=0)
+        assert plain == with_zero
+
+
+class TestReplaySmoke:
+    @pytest.fixture(scope="class")
+    def record(self, tmp_path_factory):
+        path = tmp_path_factory.mktemp("bench") / "BENCH_serve.json"
+        path.write_text(json.dumps({"rows": [{"mode": "keep-me"}]}))
+        rec = traffic_replay.main([
+            "--requests", "60", "--seed", "3", "--rps", "150",
+            "--batch", "4", "--token-budget", "48", "--max-prompt", "96",
+            "--prefix-groups", "6", "--prefix-len", "32",
+            "--deadline", "10", "--json", str(path),
+        ])
+        with open(path) as f:
+            merged = json.load(f)
+        return rec, merged
+
+    def test_record_schema(self, record):
+        rec, _ = record
+        assert rec["requests"] == 60
+        outcomes = rec["outcomes"]
+        assert sum(outcomes.values()) == 60
+        for dist in ("ttft_ms", "queue_wait_ms", "admitted_ttft_ms",
+                     "tpot_ms"):
+            assert set(rec[dist]) == {"mean", "p50", "p99"}
+            assert rec[dist]["p50"] <= rec[dist]["p99"]
+        good = rec["goodput"]
+        assert 0.0 <= good["met_fraction"] <= 1.0
+        assert good["met_requests"] <= outcomes["finished"]
+        assert good["met_tokens_per_s"] <= good["tokens_per_s"]
+        assert rec["engine"]["mode"] == "packed+paged"
+
+    def test_zero_leaked_pages(self, record):
+        rec, _ = record
+        assert rec["leaked_pages"] == 0
+
+    def test_json_merge_preserves_existing(self, record):
+        rec, merged = record
+        assert merged["rows"] == [{"mode": "keep-me"}]
+        assert merged["traffic"]["requests"] == rec["requests"]
+        assert merged["traffic"]["leaked_pages"] == 0
