@@ -71,24 +71,39 @@ def seeded_prompts(n: int, prompt_len: int, vocab: int, seed: int = 1,
     ]
 
 
+def _req_sampling(sampling, uid: int):
+    """Per-request sampling params: base params re-seeded per uid so every
+    request draws an independent, reproducible stream.  Duck-typed on
+    ``with_seed`` to keep this module jax-free (``sampling`` is a
+    ``repro.serve.SamplingParams`` when given)."""
+    if sampling is None:
+        return {}
+    return {"sampling": sampling.with_seed(sampling.seed + uid)}
+
+
 def make_requests(n: int, prompt_len: int, new_tokens: int, vocab: int,
-                  seed: int = 1, shared_prefix: int = 0) -> List:
+                  seed: int = 1, shared_prefix: int = 0,
+                  sampling=None) -> List:
     """Uniform-length request set (uids ``0..n-1``); the serving
-    benchmarks' default workload."""
+    benchmarks' default workload.  ``sampling`` (a ``SamplingParams``)
+    turns on stochastic decoding: request ``i`` gets
+    ``sampling.with_seed(sampling.seed + i)``."""
     from repro.serve import Request  # lazy: keep common.py jax-free
 
     return [
-        Request(uid=i, prompt=p, max_new_tokens=new_tokens)
+        Request(uid=i, prompt=p, max_new_tokens=new_tokens,
+                **_req_sampling(sampling, i))
         for i, p in enumerate(seeded_prompts(n, prompt_len, vocab, seed,
                                              shared_prefix))
     ]
 
 
 def mixed_requests(n: int, prompt_len: int, new_tokens: int, vocab: int,
-                   seed: int = 1) -> List:
+                   seed: int = 1, sampling=None) -> List:
     """Alternating long/short prompts -> engine steps that carry decode
     AND prefill work (the shapes where token packing differs from the
-    dense program)."""
+    dense program).  ``sampling`` seeds per-request streams exactly as in
+    :func:`make_requests`."""
     from repro.serve import Request  # lazy: keep common.py jax-free
 
     rng = np.random.default_rng(seed)
@@ -96,6 +111,6 @@ def mixed_requests(n: int, prompt_len: int, new_tokens: int, vocab: int,
             for i in range(n)]
     return [
         Request(uid=i, prompt=rng.integers(0, vocab, size=m).tolist(),
-                max_new_tokens=new_tokens)
+                max_new_tokens=new_tokens, **_req_sampling(sampling, i))
         for i, m in enumerate(lens)
     ]

@@ -31,6 +31,14 @@ greedy decode of self-repeating streams is n-gram territory, so the spec
 engine must take >= 1.5x fewer engine steps per generated token than the
 same engine without speculation.
 
+The A/B also carries **stochastic-sampling rows** (temperature=0.8,
+top_p=0.95, per-request seeds): "sampled-dense" is the sampled oracle,
+"sampled" (packed+paged) and — with ``--spec`` — "spec-sampled"
+(rejection-sampling speculation) must be byte-identical to it; the
+spec-sampled row records the acceptance rate under sampling so the
+greedy-vs-sampled throughput and acceptance trajectory is tracked in
+``BENCH_serve.json`` across PRs.
+
 ``--json PATH`` additionally writes every row as a machine-readable perf
 record (the CI full lane emits ``BENCH_serve.json``), so the repo keeps a
 benchmark trajectory across PRs.
@@ -49,29 +57,58 @@ from common import make_requests, mixed_requests  # noqa: E402
 
 from repro.models import ModelConfig
 from repro.models.model import init_params
-from repro.serve import ContinuousBatcher, NGramProposer, Request, SpecConfig
+from repro.serve import (
+    ContinuousBatcher,
+    NGramProposer,
+    Request,
+    SamplingParams,
+    SpecConfig,
+)
 
 SPEC_K = 4
 
-#: engine kwargs per A/B mode; paged rides the packed step program (the
-#: two compose) so its delta against "packed" isolates the page tables,
-#: and "spec" rides paged so its delta isolates the propose/verify loop.
-#: Values are factories: the spec proposer keeps per-slot state, so every
-#: engine needs a fresh one.
+#: stochastic rows decode at temperature 0.8 with nucleus 0.95; request
+#: ``i`` streams from seed ``SAMPLED.seed + i`` (see common._req_sampling)
+SAMPLED = SamplingParams(temperature=0.8, top_p=0.95)
+
+#: per A/B mode: (engine-kwargs factory, request sampling params).  paged
+#: rides the packed step program (the two compose) so its delta against
+#: "packed" isolates the page tables, and "spec" rides paged so its delta
+#: isolates the propose/verify loop.  The sampled trio replays the same
+#: trace stochastically: "sampled-dense" is the sampled oracle,
+#: "sampled" (packed+paged) and "spec-sampled" (rejection-sampling
+#: speculation) must reproduce it byte-identically.  Kwargs are
+#: factories: the spec proposer keeps per-slot state, so every engine
+#: needs a fresh one.
 MODES = {
-    "dense": lambda: {},
-    "packed": lambda: {"packed": True},
-    "paged": lambda: {"packed": True, "cache": "paged", "page_size": 16},
-    "paged-int8": lambda: {"packed": True, "cache": "paged", "page_size": 16,
-                           "kv_dtype": "int8"},
-    "spec": lambda: {"packed": True, "cache": "paged", "page_size": 16,
-                     "spec": SpecConfig(NGramProposer(), k=SPEC_K)},
+    "dense": (lambda: {}, None),
+    "packed": (lambda: {"packed": True}, None),
+    "paged": (lambda: {"packed": True, "cache": "paged", "page_size": 16},
+              None),
+    "paged-int8": (lambda: {"packed": True, "cache": "paged",
+                            "page_size": 16, "kv_dtype": "int8"}, None),
+    "spec": (lambda: {"packed": True, "cache": "paged", "page_size": 16,
+                      "spec": SpecConfig(NGramProposer(), k=SPEC_K)}, None),
+    "sampled-dense": (lambda: {}, SAMPLED),
+    "sampled": (lambda: {"packed": True, "cache": "paged", "page_size": 16},
+                SAMPLED),
+    "spec-sampled": (lambda: {"packed": True, "cache": "paged",
+                              "page_size": 16,
+                              "spec": SpecConfig(NGramProposer(),
+                                                 k=SPEC_K)}, SAMPLED),
 }
 
-#: modes whose outputs must be *bit-identical* to the dense oracle.
+#: mode -> oracle whose outputs it must reproduce *bit-identically*
+#: (greedy modes against "dense", sampled modes against "sampled-dense").
 #: paged-int8 quantizes KV rows, so it gets a token-match-rate tier
 #: instead (lengths must match; >= INT8_MATCH_MIN of tokens identical).
-EXACT_MODES = ("packed", "paged", "spec")
+ORACLE = {
+    "packed": "dense",
+    "paged": "dense",
+    "spec": "dense",
+    "sampled": "sampled-dense",
+    "spec-sampled": "sampled-dense",
+}
 INT8_MATCH_MIN = 0.9
 
 
@@ -135,10 +172,10 @@ def bench(params, cfg, args, chunk, budget):
     }
 
 
-def mixed_trace(args, vocab, seed=1):
+def mixed_trace(args, vocab, seed=1, sampling=None):
     """Seeded long/short trace (see ``common.mixed_requests``)."""
     return mixed_requests(args.requests, args.prompt_len, args.new_tokens,
-                          vocab, seed=seed)
+                          vocab, seed=seed, sampling=sampling)
 
 
 def bench_modes_ab(params, cfg, args):
@@ -148,27 +185,30 @@ def bench_modes_ab(params, cfg, args):
     if 4 not in budgets:
         budgets = [4] + budgets  # the acceptance point: budget=4
     modes = dict(MODES) if args.spec else {
-        m: f for m, f in MODES.items() if m != "spec"
+        m: f for m, f in MODES.items() if m not in ("spec", "spec-sampled")
     }
 
-    hdr = f"{'budget':>7} {'mode':>7} {'granted/step':>13} {'mixed-step ms':>14} " \
+    hdr = f"{'budget':>7} {'mode':>13} {'granted/step':>13} {'mixed-step ms':>14} " \
           f"{'decode-step ms':>15} {'TTFT ms':>8} {'tok/s':>8} {'cache MiB':>10} {'outputs':>8}"
     print(hdr)
     print("-" * len(hdr))
     rows, records = {}, []
     for budget in budgets:
-        for mode, mode_kw_fn in modes.items():
+        for mode, (mode_kw_fn, mode_sampling) in modes.items():
             eng = ContinuousBatcher(
                 params, cfg, batch_slots=args.batch,
                 max_len=args.prompt_len + args.new_tokens,
                 chunk_size=16, token_budget=budget, **mode_kw_fn(),
             )
-            run_once(eng, mixed_trace(args, cfg.vocab_size, seed=7))  # warmup
+            run_once(eng, mixed_trace(args, cfg.vocab_size, seed=7,
+                                      sampling=mode_sampling))  # warmup
             # reset_stats rebaselines the page accounting too
             # (KVCache.reset_accounting), so the measured run records only
             # its own page traffic — no engine rebuild needed
             eng.reset_stats()
-            done, _, total = run_once(eng, mixed_trace(args, cfg.vocab_size))
+            done, _, total = run_once(
+                eng, mixed_trace(args, cfg.vocab_size,
+                                 sampling=mode_sampling))
             mixed = [s for s in eng.step_stats if s.prefill_tokens > 0]
             decode = [s for s in eng.step_stats if s.prefill_tokens == 0]
             mixed_ms = 1e3 * float(np.mean([s.wall_time for s in mixed]))
@@ -181,10 +221,17 @@ def bench_modes_ab(params, cfg, args):
                 "mixed_ms": mixed_ms,
                 "outputs": {u: r.output for u, r in done.items()},
             }
+
             spec_stats = (
                 {"acceptance_rate": summ["acceptance_rate"],
                  "draft_tokens": summ["draft_tokens"]}
-                if mode == "spec" else {}
+                if mode in ("spec", "spec-sampled") else {}
+            )
+            sampling_rec = (
+                {"sampling": {"temperature": mode_sampling.temperature,
+                              "top_k": mode_sampling.top_k,
+                              "top_p": mode_sampling.top_p}}
+                if mode_sampling is not None else {}
             )
             records.append({
                 "mode": mode, "budget": budget, "granted_per_step": granted,
@@ -194,13 +241,14 @@ def bench_modes_ab(params, cfg, args):
                 "tokens_per_s": n_tok / total, "total_s": total,
                 "steps": eng.steps,
                 "steps_per_token": summ["steps_per_token"],
-                **spec_stats, **cstats,
+                **spec_stats, **sampling_rec, **cstats,
             })
-            if mode == "dense":
+            if mode in ("dense", "sampled-dense"):
                 verdict = "oracle"
-            elif mode in EXACT_MODES:
+            elif mode in ORACLE:
                 verdict = "same" if (
-                    rows[(budget, mode)]["outputs"] == rows[(budget, "dense")]["outputs"]
+                    rows[(budget, mode)]["outputs"]
+                    == rows[(budget, ORACLE[mode])]["outputs"]
                 ) else "DIFF"
             else:
                 frac, lens_ok = token_match(
@@ -208,20 +256,20 @@ def bench_modes_ab(params, cfg, args):
                 )
                 verdict = f"{frac:.0%}" if lens_ok else "LEN-DIFF"
                 records[-1]["token_match"] = frac
-            print(f"{str(budget or '-'):>7} {mode:>7} "
+            print(f"{str(budget or '-'):>7} {mode:>13} "
                   f"{granted:>13.1f} {mixed_ms:>14.2f} {decode_ms:>15.2f} "
                   f"{summ['mean_ttft'] * 1e3:>8.1f} {n_tok / total:>8.0f} "
                   f"{cstats['cache_bytes'] / 2**20:>10.2f} {verdict:>8}")
 
     for b in budgets:
         for mode in modes:
-            if mode == "dense":
+            if mode in ("dense", "sampled-dense"):
                 continue
-            if mode in EXACT_MODES:
-                if rows[(b, mode)]["outputs"] != rows[(b, "dense")]["outputs"]:
+            if mode in ORACLE:
+                if rows[(b, mode)]["outputs"] != rows[(b, ORACLE[mode])]["outputs"]:
                     raise SystemExit(
-                        f"FAIL: {mode} outputs diverged from the dense oracle "
-                        f"at budget={b}"
+                        f"FAIL: {mode} outputs diverged from the "
+                        f"{ORACLE[mode]} oracle at budget={b}"
                     )
             else:
                 frac, lens_ok = token_match(
@@ -233,6 +281,13 @@ def bench_modes_ab(params, cfg, args):
                         f"(lens_ok={lens_ok}) below {INT8_MATCH_MIN:.0%} "
                         f"at budget={b}"
                     )
+    # sampled streams must actually be stochastic, not greedy in disguise
+    for b in budgets:
+        if rows[(b, "sampled-dense")]["outputs"] == rows[(b, "dense")]["outputs"]:
+            raise SystemExit(
+                f"FAIL: sampled outputs identical to greedy at budget={b} "
+                f"(sampling params not threaded through?)"
+            )
 
     # proportionality: packed mixed-step wall scales with granted tokens
     caps = sorted(b for b in budgets if b)
@@ -260,7 +315,8 @@ def bench_modes_ab(params, cfg, args):
     print(f"budget={hi} decode step: dense {dd:.2f} ms vs paged {pd:.2f} ms "
           f"({dd / pd:.2f}x)")
 
-    print("PASS: outputs identical across dense/packed/paged (paged-int8 "
+    print("PASS: outputs identical across dense/packed/paged and "
+          "sampled/sampled-dense (paged-int8 "
           f">= {INT8_MATCH_MIN:.0%} token match), packed step wall scales "
           "with granted tokens")
     return records

@@ -19,7 +19,11 @@ cannot show — replayed through :class:`repro.serve.AsyncEngine`:
   per-step compute-variance argument);
 * a per-request **TTFT deadline SLO** (``--deadline``): requests whose
   first token misses it are dropped by the front-end — slot and pages
-  reclaimed — and count against goodput, not throughput.
+  reclaimed — and count against goodput, not throughput;
+* **stochastic decoding** by default (``--temperature 0.8 --top-p
+  0.95``): every request carries a workload-seeded PRNG seed, so the
+  replay exercises the sampling path end-to-end while staying fully
+  reproducible (``--temperature 0`` restores greedy).
 
 The replay records p50/p99 TTFT (split into queue wait and post-
 admission prefill latency), time-per-output-token, and **deadline
@@ -56,6 +60,7 @@ class TrafficRequest:
     max_new_tokens: int
     deadline_s: Optional[float]
     group: int  # prefix-group id (-1 = no shared prefix)
+    seed: int = 0  # per-request sampling seed (drawn from the workload rng)
 
 
 def _lognormal_lengths(rng, n, median, sigma, lo, hi):
@@ -104,6 +109,7 @@ def build_workload(
     out_lens = _lognormal_lengths(
         rng, n_requests, out_median, out_sigma, 1, max_new
     )
+    samp_seeds = rng.integers(0, 2**31, size=n_requests)
     out = []
     for i in range(n_requests):
         plen, g = int(prompt_lens[i]), int(groups[i])
@@ -121,6 +127,7 @@ def build_workload(
                 max_new_tokens=int(out_lens[i]),
                 deadline_s=deadline_s,
                 group=g,
+                seed=int(samp_seeds[i]),
             )
         )
     return out
@@ -138,11 +145,13 @@ def _dist_ms(values: List[float]) -> Dict[str, float]:
 
 
 async def replay(frontend, workload: List[TrafficRequest],
-                 *, time_scale: float = 1.0) -> Dict:
+                 *, time_scale: float = 1.0, sampling=None) -> Dict:
     """Open-loop replay: each request fires at its arrival time (scaled
-    by ``time_scale``) no matter how far behind the engine is.  Returns
-    the raw per-request outcomes; aggregation lives in
-    :func:`summarize`."""
+    by ``time_scale``) no matter how far behind the engine is.
+    ``sampling`` (a ``SamplingParams``) turns on stochastic decoding:
+    request ``i`` streams from ``sampling.with_seed(workload[i].seed)``,
+    so the realization is pinned by the workload seed.  Returns the raw
+    per-request outcomes; aggregation lives in :func:`summarize`."""
     from repro.serve import AdmissionError
 
     t0 = time.perf_counter()
@@ -156,6 +165,8 @@ async def replay(frontend, workload: List[TrafficRequest],
             stream = await frontend.submit(
                 list(item.prompt), item.max_new_tokens,
                 uid=item.uid, deadline_s=item.deadline_s,
+                sampling=(sampling.with_seed(item.seed)
+                          if sampling is not None else None),
             )
         except AdmissionError:
             results[item.uid] = {"status": "rejected", "tokens": 0,
@@ -215,6 +226,11 @@ def summarize(raw: Dict, workload: List[TrafficRequest], engine,
             "output_p99": float(np.quantile(out_lens, 0.99)),
         },
         "deadline_s": args.deadline,
+        "sampling": (
+            {"temperature": args.temperature, "top_k": args.top_k,
+             "top_p": args.top_p, "per_request_seeds": True}
+            if args.temperature > 0 else {"temperature": 0.0}
+        ),
         "outcomes": {
             "finished": by_status.get("finished", 0),
             "dropped": by_status.get("dropped", 0),
@@ -302,6 +318,12 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--deadline", type=float, default=5.0,
                     help="per-request TTFT SLO in seconds (0 = none)")
+    ap.add_argument("--temperature", type=float, default=0.8,
+                    help="sampling temperature (0 = greedy decoding)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation (0 = off)")
+    ap.add_argument("--top-p", type=float, default=0.95,
+                    help="nucleus truncation (1.0 = off)")
     ap.add_argument("--batch", type=int, default=16, help="cache slots")
     ap.add_argument("--chunk", type=int, default=32)
     ap.add_argument("--token-budget", type=int, default=96)
@@ -330,11 +352,20 @@ def main(argv=None):
         max_new=args.max_new, deadline_s=args.deadline or None,
     )
     n_tok = sum(len(w.prompt) + w.max_new_tokens for w in workload)
+    samp = ("greedy" if args.temperature <= 0 else
+            f"T={args.temperature} top_p={args.top_p}"
+            + (f" top_k={args.top_k}" if args.top_k else ""))
     print(f"replaying {len(workload)} requests ({n_tok} worst-case tokens) "
           f"at {args.rps} req/s over {workload[-1].arrival_s:.1f}s, "
-          f"deadline {args.deadline}s, {args.batch} slots")
+          f"deadline {args.deadline}s, {args.batch} slots, {samp}")
 
-    from repro.serve import AsyncEngine
+    from repro.serve import AsyncEngine, SamplingParams
+
+    base_sampling = (
+        SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                       top_p=args.top_p)
+        if args.temperature > 0 else None
+    )
 
     async def go():
         fe = AsyncEngine(eng, waiting_room=args.waiting_room,
@@ -348,7 +379,8 @@ def main(argv=None):
             while fe.in_flight:
                 await asyncio.sleep(0.002)
             eng.reset_stats()
-            return await replay(fe, workload, time_scale=args.time_scale)
+            return await replay(fe, workload, time_scale=args.time_scale,
+                                sampling=base_sampling)
         finally:
             await fe.stop(drain=True)
 

@@ -32,6 +32,7 @@ from repro.serve import (
     ContinuousBatcher,
     DraftModelProposer,
     NGramProposer,
+    SamplingParams,
     SpecConfig,
 )
 
@@ -76,6 +77,17 @@ def main():
                          "output stays token-identical to plain greedy")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="max draft tokens verified per decode slot per step")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy; with --spec, "
+                         "rejection-sampling verification keeps the sampled "
+                         "stream identical to no-spec decoding)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus truncation (1.0 = off)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base sampling seed; request i streams from "
+                         "seed+i, so reruns are reproducible")
     ap.add_argument("--arch", default="",
                     help="optional smoke-config name (e.g. mixtral-8x22b)")
     args = ap.parse_args()
@@ -118,9 +130,17 @@ def main():
         spec=spec,
     )
 
+    sampling = None
+    if args.temperature > 0:
+        sampling = SamplingParams(temperature=args.temperature,
+                                  top_k=args.top_k, top_p=args.top_p,
+                                  seed=args.sample_seed)
+        print(f"  sampling: T={args.temperature} top_k={args.top_k} "
+              f"top_p={args.top_p} base seed {args.sample_seed}")
     for req in make_requests(args.requests, args.prompt_len, args.new_tokens,
                              cfg.vocab_size, seed=1,
-                             shared_prefix=args.shared_prefix):
+                             shared_prefix=args.shared_prefix,
+                             sampling=sampling):
         eng.submit(req)
 
     t0 = time.time()

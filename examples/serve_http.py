@@ -9,6 +9,17 @@ then::
     curl -sN localhost:8000/v1/completions -d \
         '{"prompt": [3, 1, 4, 1, 5], "max_tokens": 16, "stream": true}'
 
+Request body fields (OpenAI completions shape): ``prompt`` (list of
+token ids, or a string through the demo hasher), ``max_tokens``,
+``stream``, and the sampling knobs ``temperature`` (float >= 0, default
+0 = greedy), ``top_k`` (int >= 0, 0 = off), ``top_p`` (float in (0, 1],
+1 = off), ``seed`` (int).  Sampling is per-request and reproducible:
+the same ``seed`` + params replays the identical token stream; when
+``temperature > 0`` and no ``seed`` is given the server assigns one
+from a monotone counter (echoed back as ``"seed"`` in the response) so
+concurrent requests never share a stream.  Invalid sampling params are
+HTTP 400.
+
 Everything is stdlib: ``asyncio.start_server`` plus a small HTTP/1.1
 shim — no web framework in the image, none needed.  One
 :class:`repro.serve.AsyncEngine` serves every connection; requests
@@ -29,6 +40,7 @@ with streaming, not a real tokenizer).
 """
 import argparse
 import asyncio
+import itertools
 import json
 import time
 
@@ -41,6 +53,7 @@ from repro.serve import (
     AsyncEngine,
     ContinuousBatcher,
     InvalidRequestError,
+    SamplingParams,
 )
 
 
@@ -116,6 +129,24 @@ class Server:
         self.cfg = cfg
         self.deadline = deadline
         self.default_max = default_max
+        # auto-assigned seeds for sampled requests that don't send one:
+        # a counter, not entropy, so server logs alone replay any stream
+        self._auto_seed = itertools.count(1)
+
+    def _sampling(self, spec):
+        """(SamplingParams or None, effective seed or None) from request
+        fields; raises ValueError (-> 400) on invalid params."""
+        temperature = float(spec.get("temperature", 0.0))
+        top_k = spec.get("top_k", 0)
+        top_p = float(spec.get("top_p", 1.0))
+        if temperature == 0.0 and top_k == 0 and top_p == 1.0 \
+                and "seed" not in spec:
+            return None, None
+        seed = spec.get("seed")
+        if seed is None:
+            seed = next(self._auto_seed)
+        return SamplingParams(temperature=temperature, top_k=top_k,
+                              top_p=top_p, seed=seed), seed
 
     async def handle(self, reader, writer):
         try:
@@ -139,9 +170,11 @@ class Server:
             spec = json.loads(body or b"{}")
             ids = ids_from_prompt(spec.get("prompt"), self.cfg.vocab_size)
             max_tokens = int(spec.get("max_tokens", self.default_max))
+            sampling, seed = self._sampling(spec)
             stream = await self.fe.submit(ids, max_tokens,
-                                          deadline_s=self.deadline)
-        except (ValueError, InvalidRequestError) as e:
+                                          deadline_s=self.deadline,
+                                          sampling=sampling)
+        except (TypeError, ValueError, InvalidRequestError) as e:
             writer.write(http_response(STATUS[400], {"error": str(e)}))
             return
         except AdmissionError as e:
@@ -174,6 +207,7 @@ class Server:
             writer.write(http_response(STATUS[200], {
                 "id": f"cmpl-{stream.uid}", "object": "completion",
                 "created": created, "model": self.cfg.name,
+                **({"seed": seed} if seed is not None else {}),
                 "choices": [{
                     "index": 0,
                     "text": " ".join(str(t) for t in stream.tokens),
@@ -232,17 +266,38 @@ async def self_test(port, cfg):
     assert events[-1] == b"[DONE]" and len(events) == 9, events
     streamed = [json.loads(e)["choices"][0]["token"] for e in events[:-1]]
     assert streamed == toks, (streamed, toks)
-    # bad requests
+    # sampled completions: same seed -> identical stream (reproducible),
+    # different seed -> different stream, seed echoed when auto-assigned
+    sampled = {"prompt": [3, 1, 4, 1, 5], "max_tokens": 8,
+               "temperature": 0.8, "top_p": 0.95, "seed": 42}
+    _, b1 = await http_call(port, "POST", "/v1/completions", sampled)
+    _, b2 = await http_call(port, "POST", "/v1/completions", sampled)
+    t1 = json.loads(b1)["choices"][0]["tokens"]
+    assert t1 == json.loads(b2)["choices"][0]["tokens"], (b1, b2)
+    assert json.loads(b1)["seed"] == 42
+    _, b3 = await http_call(port, "POST", "/v1/completions",
+                            {**sampled, "seed": 43})
+    assert json.loads(b3)["choices"][0]["tokens"] != t1
+    status, b4 = await http_call(port, "POST", "/v1/completions",
+                                 {k: v for k, v in sampled.items()
+                                  if k != "seed"})
+    assert status == 200 and isinstance(json.loads(b4)["seed"], int)
+    # bad requests (including invalid sampling params)
     for bad in ({"prompt": [], "max_tokens": 4},
                 {"prompt": [1, 2], "max_tokens": 0},
-                {"prompt": "x" * 10_000, "max_tokens": 4}):
+                {"prompt": "x" * 10_000, "max_tokens": 4},
+                {"prompt": [1, 2], "max_tokens": 4, "temperature": -1.0},
+                {"prompt": [1, 2], "max_tokens": 4, "top_p": 0.0},
+                {"prompt": [1, 2], "max_tokens": 4, "top_k": -3},
+                {"prompt": [1, 2], "max_tokens": 4, "temperature": "hot"}):
         status, _ = await http_call(port, "POST", "/v1/completions", bad)
         assert status == 400, (bad, status)
     status, _ = await http_call(port, "GET", "/v1/nope")
     assert status == 404
     status, body = await http_call(port, "GET", "/v1/stats")
     assert status == 200 and json.loads(body)["frontend_finished"] >= 3.0
-    print("self-test OK: completions, streaming SSE, errors, stats")
+    print("self-test OK: completions, streaming SSE, seeded sampling, "
+          "errors, stats")
 
 
 async def amain(args):

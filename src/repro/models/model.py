@@ -372,10 +372,16 @@ def verify_step(
 
     Row i carries ``[t_last, d_1, .., d_k]`` at the slot's absolute
     positions; column ``j`` of the returned ``(B, 1 + k, V)`` logits is
-    the model's next-token distribution after consuming the row through
-    column ``j`` — so greedy acceptance keeps the longest prefix where
-    ``d_{j+1} == argmax(logits[:, j])`` and the first mismatching column
-    supplies the bonus token.  This *is* ``prefill_chunk``: verification
+    the model's **full** next-token distribution after consuming the row
+    through column ``j`` — per-column probabilities, not a pre-reduced
+    argmax, which is what both acceptance rules need: greedy acceptance
+    keeps the longest prefix where ``d_{j+1} == argmax(logits[:, j])``,
+    and rejection-sampling acceptance (``serve.spec.accept_sampled``)
+    samples each column with the request's own params and per-position
+    PRNG key (``serve.sampling.sample_tokens``) and keeps the prefix the
+    samples confirm — the first mismatching column supplies the
+    bonus/resampled token either way.  This *is* ``prefill_chunk``:
+    verification
     is chunked prefill at the slot's absolute positions (the same
     shape-stable compiled program family as mixed prefill+decode steps),
     which means the drafts' KV lands in the cache as a side effect and

@@ -3,12 +3,19 @@ from .block_table import OutOfPages, PagedTables, PageError
 from .frontend import AsyncEngine, RequestStream, StreamEvent
 from .kv import DenseSlots, KVCache, KVCacheSpec, KVState, Paged
 from .packing import PackedLayout, pack_step, packed_capacity
+from .sampling import (
+    SamplingParams,
+    residual_sample,
+    sample_one,
+    sample_tokens,
+)
 from .spec import (
     DraftModelProposer,
     NGramProposer,
     Proposer,
     SpecConfig,
     accept_greedy,
+    accept_sampled,
 )
 from .scheduler import (
     AdmissionError,
@@ -40,12 +47,17 @@ __all__ = [
     "Proposer",
     "Request",
     "RequestStream",
+    "SamplingParams",
     "SpecConfig",
     "StepStats",
     "StreamEvent",
     "UnsupportedDistError",
     "UnsupportedPatternError",
     "accept_greedy",
+    "accept_sampled",
     "pack_step",
     "packed_capacity",
+    "residual_sample",
+    "sample_one",
+    "sample_tokens",
 ]

@@ -46,6 +46,7 @@ import time
 from collections import deque
 from typing import AsyncIterator, Deque, Dict, List, Optional, Sequence
 
+from .sampling import SamplingParams
 from .scheduler import AdmissionError, ContinuousBatcher, Request, StepStats
 
 #: stream terminator pushed into a RequestStream's token queue
@@ -246,8 +247,16 @@ class AsyncEngine:
 
     async def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
                      uid: Optional[int] = None,
-                     deadline_s: Optional[float] = None) -> RequestStream:
+                     deadline_s: Optional[float] = None,
+                     sampling: Optional[SamplingParams] = None
+                     ) -> RequestStream:
         """Accept a request into the system and return its token stream.
+
+        ``sampling`` carries the request's stochastic-decode knobs
+        (``serve.sampling.SamplingParams``: temperature / top-k / top-p /
+        seed); None = greedy argmax.  Identical (prompt, params, seed)
+        replay identical streams — seeding is the caller's namespace, the
+        front-end never invents entropy.
 
         Raises ``InvalidRequestError``/``AdmissionError`` immediately for
         requests the engine can never serve (``validate_request``), and
@@ -265,7 +274,9 @@ class AsyncEngine:
         if uid in self._live or any(h.uid == uid for h in self._waiting):
             raise ValueError(f"uid {uid} is already in flight")
         req = Request(uid=uid, prompt=list(prompt),
-                      max_new_tokens=max_new_tokens)
+                      max_new_tokens=max_new_tokens,
+                      sampling=sampling if sampling is not None
+                      else SamplingParams())
         # TTFT measures from *here* — the user-visible submit — not from
         # engine admission; the engine honors a pre-stamped submitted_at
         req.submitted_at = time.perf_counter()

@@ -55,6 +55,15 @@ class PackedLayout:
     #: speculative verifier reads every granted column; a plain decode
     #: consumer reads the span's last (``start + count - 1``)
     spans: Dict[int, Tuple[int, int]]
+    #: (capacity,) int32 per-token *output index* — which generated token
+    #: of its request each entry's next-token prediction would be, the
+    #: ``fold_in`` data of the sampler's per-position PRNG key
+    #: (``serve.sampling``).  Prefill entries before a request's final
+    #: prompt token predict tokens that are never emitted; their indices
+    #: are clamped to 0 (a key is still derived, the sample discarded).
+    #: Padding entries are 0.  All zeros unless ``pack_step`` was given
+    #: ``out_base``.
+    out_idx: np.ndarray
     n_tokens: int
     capacity: int
 
@@ -79,13 +88,19 @@ def packed_capacity(batch_slots: int, chunk_size: int, token_budget,
     return max(batch_slots, token_budget) + 1
 
 
-def pack_step(grants: Sequence[Grant], capacity: int) -> PackedLayout:
+def pack_step(grants: Sequence[Grant], capacity: int,
+              out_base: "Dict[int, int] | None" = None) -> PackedLayout:
     """Flatten this iteration's grants into a fixed-capacity layout.
 
     ``grants`` is the scheduler's output: for each active slot, the slot
     index, the slot's current write cursor (first absolute position), and
     the tokens it consumes this step (one for decode, up to a chunk for
     prefill).  Zero-token grants are allowed and occupy no entries.
+
+    ``out_base`` optionally maps slot -> the output index of the grant's
+    *first* entry's prediction (may be negative mid-prefill, where early
+    columns predict nothing that is emitted); entry ``j`` of a grant gets
+    ``out_base[slot] + j``, clamped at 0, in ``PackedLayout.out_idx``.
     """
     total = sum(len(toks) for _, _, toks in grants)
     if total > capacity:
@@ -96,6 +111,7 @@ def pack_step(grants: Sequence[Grant], capacity: int) -> PackedLayout:
     tokens = np.zeros((capacity,), np.int32)
     slot_ids = np.full((capacity,), PAD_SLOT, np.int32)
     positions = np.zeros((capacity,), np.int32)
+    out_idx = np.zeros((capacity,), np.int32)
     starts: List[int] = [0]
     spans: Dict[int, Tuple[int, int]] = {}
     cursor = 0
@@ -106,6 +122,11 @@ def pack_step(grants: Sequence[Grant], capacity: int) -> PackedLayout:
         tokens[cursor : cursor + m] = toks
         slot_ids[cursor : cursor + m] = slot
         positions[cursor : cursor + m] = np.arange(pos0, pos0 + m)
+        if out_base is not None:
+            base = out_base.get(slot, 0)
+            out_idx[cursor : cursor + m] = np.maximum(
+                base + np.arange(m), 0
+            )
         spans[slot] = (cursor, m)
         cursor += m
         starts.append(cursor)
@@ -115,6 +136,7 @@ def pack_step(grants: Sequence[Grant], capacity: int) -> PackedLayout:
         positions=positions,
         segment_starts=np.asarray(starts, np.int32),
         spans=spans,
+        out_idx=out_idx,
         n_tokens=total,
         capacity=capacity,
     )

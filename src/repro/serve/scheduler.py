@@ -44,6 +44,13 @@ determine the compute, so the budget bounds actual per-step compute, not
 just scheduled-token accounting.  Scheduling, deferral, and accounting
 are shared between the two modes; the dense mode is the oracle the
 packed parity suite (``tests/test_serve_packed.py``) compares against.
+
+Decode is sampled per request (``Request.sampling`` — temperature /
+top-k / top-p / seed; ``serve.sampling``): the step's logits feed a
+jitted sampler instead of a bare argmax, with per-token PRNG keys
+derived from (request seed, output index) so seeded streams replay
+across restarts, step paths, and speculation.  The default params are
+greedy and byte-identical to argmax decode.
 """
 from __future__ import annotations
 
@@ -65,7 +72,8 @@ from ..models.model import (
 )
 from . import packing
 from .kv import KVCache, KVCacheSpec
-from .spec import Proposer, SpecConfig, accept_greedy
+from .sampling import SamplingParams, sample_tokens
+from .spec import Proposer, SpecConfig, accept_sampled
 
 PyTree = object
 
@@ -118,6 +126,12 @@ class Request:
     uid: int
     prompt: List[int]
     max_new_tokens: int
+    #: per-request stochastic-decode knobs (``serve.sampling``); the
+    #: default is greedy argmax — byte-identical to the pre-sampling
+    #: engine.  Output token ``i`` is sampled with
+    #: ``fold_in(PRNGKey(sampling.seed), i)`` regardless of step path
+    #: (dense/packed/paged) or speculation, so seeded streams replay.
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     output: List[int] = dataclasses.field(default_factory=list)
     #: the engine finished this request short of ``max_new_tokens``
     #: (its slot ran out of cache positions) — surfaced instead of
@@ -186,6 +200,14 @@ class StepStats:
     draft_tokens: int = 0  # speculative draft tokens verified this step
     accepted_tokens: int = 0  # drafts the target model accepted
     queued_requests: int = 0  # requests waiting for a slot at step start
+    #: scheduled tokens past ``token_budget`` this step.  The budget is a
+    #: deferral threshold, not a hard cap: decode baselines are
+    #: unconditional and the prefill starvation guard grants one token
+    #: past an exhausted budget (see ``_schedule``), so a full decode
+    #: batch under a tiny budget overshoots by design.  This field makes
+    #: that overshoot explicit instead of letting BENCH records present
+    #: tau as absolute.  Always 0 with no budget.
+    budget_overshoot: int = 0
 
     @property
     def scheduled_tokens(self) -> int:
@@ -247,13 +269,16 @@ class ContinuousBatcher:
         verify grant (chunked prefill at the slot's absolute positions —
         the contract ``models.model.verify_step`` documents; the engine's
         one jitted step program serves prefill, decode, and verify
-        grants alike), keep the longest greedy-matching
-        prefix plus a bonus token, and roll rejected KV back
-        (position-mask trim for dense, ``KVCache.trim_slot`` for paged).
+        grants alike), keep the draft prefix matching the target's
+        per-column *sampled* tokens plus a bonus token
+        (rejection-sampling acceptance — ``spec.accept_sampled``; the
+        argmax prefix match when the request is greedy), and roll
+        rejected KV back (position-mask trim for dense,
+        ``KVCache.trim_slot`` for paged).
         Draft tokens are scheduled under ``token_budget`` with lower
         priority than decode baselines and higher than prefill chunks.
-        Output streams are token-identical to the non-speculative greedy
-        engine by construction.
+        Output streams are token-identical to the non-speculative
+        engine — greedy or seeded-sampled alike — by construction.
       dist: optional ``repro.dist.Distribution`` — shards the decode cache
         (slots over the data axes, KV heads over "model") and the params
         by the path-based rules; the jitted engine step then partitions
@@ -392,6 +417,13 @@ class ContinuousBatcher:
             raise InvalidRequestError(
                 f"request {req.uid}: max_new_tokens must be >= 1, got "
                 f"{req.max_new_tokens}"
+            )
+        if not isinstance(req.sampling, SamplingParams):
+            # a duck-typed stand-in would fail inside the jitted sampler
+            # mid-step (or worse, coerce silently); reject at submit
+            raise InvalidRequestError(
+                f"request {req.uid}: sampling must be a SamplingParams, "
+                f"got {type(req.sampling).__name__}"
             )
         if len(req.prompt) + req.max_new_tokens > self.max_len:
             raise InvalidRequestError(
@@ -573,6 +605,22 @@ class ContinuousBatcher:
         The oldest prefilling request is always granted >= 1 token, so
         under sustained load every prompt reaches the head of the line
         and makes progress: no starvation.
+
+        The budget may therefore be exceeded, in exactly two intentional
+        ways (both are liveness guarantees, mirroring the paper's
+        semantics — only *deferrable* work is stochastic across steps):
+
+        1. decode baselines are unconditional — up to ``batch_slots``
+           tokens are scheduled even when ``token_budget`` is smaller,
+           so every in-flight request emits on every step;
+        2. the starvation guard grants the oldest prefilling slot one
+           token past an exhausted budget (the ``min_microbatches=1``
+           analogue), so a prompt behind a full decode batch still
+           reaches its first token.
+
+        ``packing.packed_capacity`` sizes the packed program for both
+        exceptions, and each step reports the realized excess as
+        ``StepStats.budget_overshoot``.
         """
         n = [0] * len(self.slots)
         spent = 0
@@ -606,10 +654,17 @@ class ContinuousBatcher:
             spent += grant
         return n
 
-    def _run_dense(self, grants) -> Dict[int, np.ndarray]:
-        """Dense (B, C) step.  Returns {slot: per-granted-column argmax
-        tokens} — the last column is the sampled/bonus token, the earlier
-        columns are what the speculative verifier checks drafts against."""
+    def _run_dense(self, grants, out_base) -> Dict[int, np.ndarray]:
+        """Dense (B, C) step.  Returns {slot: per-granted-column sampled
+        tokens} — the last column is the emitted/bonus token, the earlier
+        columns are what the speculative verifier checks drafts against.
+        Greedy slots (``temperature == 0``, the default) sample by
+        raw-logits argmax: byte-identical to the pre-sampling engine.
+
+        ``out_base`` maps slot -> output index of the grant's first
+        column's prediction (negative mid-prefill; those columns' samples
+        are discarded, so their key indices are clamped at 0).
+        """
         b = len(self.slots)
         mixed = any(self.slots[i].prefilling for i, _, _ in grants)
         c = self.chunk_size if mixed else 1
@@ -620,37 +675,68 @@ class ContinuousBatcher:
         tokens = np.zeros((b, c), np.int32)
         pos = np.zeros((b,), np.int32)
         lens = np.zeros((b,), np.int32)
+        seeds = np.zeros((b, c), np.uint32)
+        oidx = np.zeros((b, c), np.int32)
+        temps = np.zeros((b, c), np.float32)  # unused rows: argmax, discarded
+        topk = np.zeros((b, c), np.int32)
+        topp = np.ones((b, c), np.float32)
         for i, pos0, toks in grants:
-            tokens[i, : len(toks)] = toks
+            n = len(toks)
+            tokens[i, :n] = toks
             pos[i] = pos0
-            lens[i] = len(toks)
+            lens[i] = n
+            sp = self.slots[i].req.sampling
+            seeds[i] = sp.seed & 0xFFFFFFFF
+            temps[i] = sp.temperature
+            topk[i] = sp.top_k
+            topp[i] = sp.top_p
+            oidx[i, :n] = np.maximum(out_base[i] + np.arange(n), 0)
         logits, self.cache = _engine_step(
             self.params, self.cfg, self.cache, jnp.asarray(tokens),
             jnp.asarray(pos), jnp.asarray(lens),
         )
-        # Synchronize every step (np.asarray blocks on the result).  Load-
-        # bearing beyond sampling: with async dispatch, rebinding the host
-        # token/pos buffers while the step is still in flight corrupts the
-        # computation on jax<=0.4 CPU (observed use-after-free garbage).
-        next_tok = np.asarray(jnp.argmax(logits, axis=-1))  # (B, C)
+        # Synchronize every step (np.asarray blocks on the result; the
+        # jitted sampler dispatches asynchronously in the same chain, so
+        # sampling adds no extra sync).  The sync itself is load-bearing:
+        # with async dispatch, rebinding the host token/pos buffers while
+        # the step is still in flight corrupts the computation on
+        # jax<=0.4 CPU (observed use-after-free garbage).
+        next_tok = np.asarray(sample_tokens(
+            logits, seeds, oidx, temps, topk, topp
+        ))  # (B, C)
         return {i: next_tok[i, : len(toks)] for i, _, toks in grants}
 
-    def _run_packed(self, grants) -> Dict[int, np.ndarray]:
+    def _run_packed(self, grants, out_base) -> Dict[int, np.ndarray]:
         """Token-packed (capacity,) step: compute scales with grants.
 
         Pure-decode steps (every grant one token) take the decode-sized
         program; any prefill or draft widens a grant past one token and
-        routes to the mixed-capacity program.
+        routes to the mixed-capacity program.  Sampling params and
+        per-position key indices are slot-gathered per packed entry
+        (``PackedLayout.out_idx``), so a packed row samples exactly what
+        the dense row for the same (request, output index) samples.
         """
         capacity = self.packed_capacity
         if all(len(toks) == 1 for _, _, toks in grants):
             capacity = self.packed_decode_capacity
-        layout = packing.pack_step(grants, capacity)
+        layout = packing.pack_step(grants, capacity, out_base=out_base)
+        seeds = np.zeros((capacity,), np.uint32)
+        temps = np.zeros((capacity,), np.float32)  # padding: argmax, discarded
+        topk = np.zeros((capacity,), np.int32)
+        topp = np.ones((capacity,), np.float32)
+        for i, (j, m) in layout.spans.items():
+            sp = self.slots[i].req.sampling
+            seeds[j : j + m] = sp.seed & 0xFFFFFFFF
+            temps[j : j + m] = sp.temperature
+            topk[j : j + m] = sp.top_k
+            topp[j : j + m] = sp.top_p
         logits, self.cache = _packed_engine_step(
             self.params, self.cfg, self.cache, jnp.asarray(layout.tokens),
             jnp.asarray(layout.slot_ids), jnp.asarray(layout.positions),
         )
-        next_tok = np.asarray(jnp.argmax(logits, axis=-1))  # (P,) — syncs
+        next_tok = np.asarray(sample_tokens(
+            logits, seeds, layout.out_idx, temps, topk, topp
+        ))  # (P,) — syncs
         return {i: next_tok[j : j + m] for i, (j, m) in layout.spans.items()}
 
     def step(self):
@@ -673,6 +759,14 @@ class ContinuousBatcher:
         decode_toks = prefill_toks = deferred = draft_toks = accepted_toks = 0
         grants: List[packing.Grant] = []  # (slot, start pos, tokens)
         granted_draft: Dict[int, List[int]] = {}
+        # slot -> output index of the grant's first column's prediction:
+        # column c at absolute position pos + c predicts position
+        # pos + c + 1, i.e. output index pos + c + 1 - len(prompt)
+        # (negative mid-prefill — those columns' samples are discarded).
+        # This feeds the sampler's per-position PRNG keys, which must
+        # depend only on (request seed, output index) for seeded streams
+        # to replay across step paths and speculation.
+        out_base: Dict[int, int] = {}
         for i, s in enumerate(self.slots):
             if s.free or n[i] == 0:
                 if not s.free and s.prefilling:
@@ -692,6 +786,7 @@ class ContinuousBatcher:
                 toks = [r.output[-1] if r.output else r.prompt[-1]] + draft
                 decode_toks += 1
                 draft_toks += len(draft)
+            out_base[i] = s.pos + 1 - len(r.prompt)
             grants.append((i, s.pos, toks))
 
         if self.kv is not None:
@@ -702,7 +797,11 @@ class ContinuousBatcher:
             self.cache = self.kv.state
         used_pages = self.kv.used_pages if self.kv is not None else 0
 
-        greedy = self._run_packed(grants) if self.packed else self._run_dense(grants)
+        sampled = (
+            self._run_packed(grants, out_base)
+            if self.packed
+            else self._run_dense(grants, out_base)
+        )
         if self.kv is not None:
             self.kv.state = self.cache
 
@@ -719,11 +818,13 @@ class ContinuousBatcher:
                     self.kv.register_prompt_pages(i, r.prompt, s.pos)
                 if s.pos < len(r.prompt):
                     continue  # still mid-prompt; no token emitted this step
-                emitted = [int(greedy[i][n[i] - 1])]
+                emitted = [int(sampled[i][n[i] - 1])]
             else:
-                # verify: keep the longest greedy-matching draft prefix
-                # (+ the bonus token), roll back the rejected tail's KV
-                accepted, emitted = accept_greedy(granted_draft[i], greedy[i])
+                # verify: rejection-sampling acceptance — keep the draft
+                # prefix matching the target's per-column samples (+ the
+                # bonus/resampled token), roll back the rejected tail's
+                # KV.  Greedy params make this the argmax prefix match.
+                accepted, emitted = accept_sampled(granted_draft[i], sampled[i])
                 remaining = r.max_new_tokens - len(r.output)
                 if len(emitted) > remaining:
                     # Clamp: a request asking for N tokens must never
@@ -757,6 +858,7 @@ class ContinuousBatcher:
                 if self.spec is not None:
                     self.spec.proposer.free_slot(i)
 
+        scheduled = decode_toks + draft_toks + prefill_toks
         stats = StepStats(
             self.steps, decode_toks, prefill_toks, deferred, now - t0,
             shared_tokens=self._shared_step,
@@ -764,6 +866,10 @@ class ContinuousBatcher:
             draft_tokens=draft_toks,
             accepted_tokens=accepted_toks,
             queued_requests=queued0,
+            budget_overshoot=(
+                max(scheduled - self.token_budget, 0)
+                if self.token_budget is not None else 0
+            ),
         )
         self.step_stats.append(stats)
         self.steps += 1
@@ -861,6 +967,15 @@ class ContinuousBatcher:
             "max_step_tokens": float(max((s.scheduled_tokens for s in st), default=0)),
             "mean_step_tokens": float(
                 np.mean([s.scheduled_tokens for s in st]) if st else 0.0
+            ),
+            # tau is a deferral threshold, not a hard cap (decode
+            # baselines + the starvation guard; see _schedule) — report
+            # the realized excess so BENCH consumers see it
+            "budget_overshoot_tokens": float(
+                sum(s.budget_overshoot for s in st)
+            ),
+            "max_budget_overshoot": float(
+                max((s.budget_overshoot for s in st), default=0)
             ),
             "mean_queued_requests": float(
                 np.mean([s.queued_requests for s in st]) if st else 0.0

@@ -56,6 +56,49 @@ from ..models.model import init_decode_cache, prefill_chunk, require_chunkable
 Ask = Tuple[int, List[int], int]
 
 
+def accept_sampled(
+    draft: Sequence[int], sampled: Sequence[int]
+) -> Tuple[int, List[int]]:
+    """Rejection-sampling acceptance against the target's *sampled*
+    verify columns.
+
+    ``sampled`` is the verify step's per-column sampled token for one
+    slot (length ``1 + len(draft)``): column ``j`` is the token the
+    target model samples — with the request's own ``SamplingParams`` and
+    the per-position key for output index ``base + j``
+    (``serve.sampling``) — after consuming the grant through column
+    ``j``.  Draft ``j`` is accepted iff it equals that sample; the first
+    mismatching (or final) column supplies the bonus/resampled token.
+    Returns ``(n_accepted, emitted)`` with
+    ``emitted == sampled[: n_accepted + 1]``.
+
+    This *is* the rejection-sampling rule (accept draft ``d`` with
+    probability ``min(1, p(d)/q(d))``, resample from the residual
+    ``norm(max(p - q, 0))`` on rejection) for the deterministic
+    proposers the engine ships, whose draft distribution ``q`` is a
+    point mass at ``d``: sampling ``x ~ p`` once and accepting iff
+    ``x == d`` accepts with probability ``p(d) = min(1, p(d)/q(d))``,
+    and on rejection emits ``x`` distributed as ``p`` conditioned on
+    ``x != d`` — exactly the normalized residual.  (A stochastic
+    proposer exposing its full ``q`` would use
+    ``serve.sampling.residual_sample``; the ``Proposer`` API currently
+    returns tokens only, i.e. one-hot ``q``.)  The coupling buys more
+    than distribution-exactness: because column ``j``'s key depends only
+    on (request seed, output index), the sample at any column whose
+    history matches the non-speculative stream *is* that stream's next
+    token — so speculative streams are realization-identical to the
+    non-speculative sampled engine, whatever the proposer guesses.
+
+    With greedy params (``temperature == 0``) every sampled column is
+    the argmax column and this reduces to the pre-sampling
+    ``accept_greedy`` byte-for-byte.
+    """
+    a = 0
+    while a < len(draft) and int(draft[a]) == int(sampled[a]):
+        a += 1
+    return a, [int(t) for t in sampled[: a + 1]]
+
+
 def accept_greedy(
     draft: Sequence[int], greedy: Sequence[int]
 ) -> Tuple[int, List[int]]:
@@ -69,11 +112,11 @@ def accept_greedy(
     column supplies the bonus token.  Returns ``(n_accepted, emitted)``
     with ``emitted == greedy[: n_accepted + 1]``, i.e. 1..k+1 tokens, all
     of them exactly what non-speculative greedy decoding would emit.
+
+    The ``temperature == 0`` case of :func:`accept_sampled`, kept as the
+    named contract for greedy callers and tests.
     """
-    a = 0
-    while a < len(draft) and int(draft[a]) == int(greedy[a]):
-        a += 1
-    return a, [int(t) for t in greedy[: a + 1]]
+    return accept_sampled(draft, greedy)
 
 
 class Proposer:
@@ -184,6 +227,13 @@ class DraftModelProposer(Proposer):
             params, cfg, batch_slots, max_len, linear=True
         )
         self._pos = [0] * batch_slots  # history tokens the draft cache holds
+        # the tokens those cache rows were actually written from — the
+        # recycled-slot guard.  Comparing only ``_pos[s] > len(h)`` is not
+        # enough: a recycled slot whose *new* request has a longer history
+        # than the old cursor would skip prefilling the real prefix and
+        # catch up from stale KV (wrong drafts, silently — acceptance
+        # still keeps outputs correct, but the draft hit rate collapses).
+        self._hist: List[List[int]] = [[] for _ in range(batch_slots)]
 
     def bind_engine(self, batch_slots: int, max_len: int) -> None:
         if batch_slots > self.batch_slots or max_len > self.max_len:
@@ -197,6 +247,7 @@ class DraftModelProposer(Proposer):
         # the cache rows need no clearing: the next request's catch-up
         # overwrites from position 0 and masking hides the rest
         self._pos[slot] = 0
+        self._hist[slot] = []
 
     def propose_batch(self, asks: Sequence[Ask]) -> Dict[int, List[int]]:
         asks = [
@@ -208,8 +259,21 @@ class DraftModelProposer(Proposer):
         if not asks:
             return {}
         for s, h, _ in asks:
-            if self._pos[s] > len(h):  # recycled slot: a new request began
-                self._pos[s] = 0
+            # Recycled-slot / divergent-history guard: rewind the cursor
+            # to the longest prefix of ``h`` the cache rows were really
+            # written from.  Catches the case ``free_slot`` handles (and
+            # a missed ``free_slot``, e.g. a proposer reused across
+            # engines) *including* a new request whose history is longer
+            # than the stale cursor — ``_pos[s] > len(h)`` alone missed
+            # that one and caught up from another request's KV.
+            held = self._hist[s]
+            m = 0
+            limit = min(self._pos[s], len(held), len(h))
+            while m < limit and held[m] == h[m]:
+                m += 1
+            if m < self._pos[s]:
+                self._pos[s] = m
+                self._hist[s] = held[:m]
 
         b = self.batch_slots
         # 1) catch up on unseen history; the chunk containing each slot's
@@ -229,6 +293,7 @@ class DraftModelProposer(Proposer):
                 pos[s] = self._pos[s]
                 lens[s] = n
                 self._pos[s] += n
+                self._hist[s] = list(h[: self._pos[s]])
                 if n == delta:
                     finishing.append(s)
             if not lens.any():

@@ -26,18 +26,38 @@ def record():
 class TestBenchRecord:
     def test_all_modes_present(self, record):
         modes = {r["mode"] for r in record["rows"]}
-        assert modes == {"dense", "packed", "paged", "paged-int8", "spec"}, modes
+        assert modes == {"dense", "packed", "paged", "paged-int8", "spec",
+                         "sampled-dense", "sampled", "spec-sampled"}, modes
 
     def test_rows_carry_steps_per_token(self, record):
         for r in record["rows"]:
             assert math.isfinite(r["steps_per_token"]), r
 
     def test_spec_rows_parse(self, record):
-        spec_rows = [r for r in record["rows"] if r["mode"] == "spec"]
-        assert spec_rows
-        for r in spec_rows:
-            assert 0.0 <= r["acceptance_rate"] <= 1.0
-            assert r["draft_tokens"] >= 0
+        for mode in ("spec", "spec-sampled"):
+            spec_rows = [r for r in record["rows"] if r["mode"] == mode]
+            assert spec_rows, mode
+            for r in spec_rows:
+                assert 0.0 <= r["acceptance_rate"] <= 1.0
+                assert r["draft_tokens"] >= 0
+
+    def test_sampled_rows_carry_params_and_throughput(self, record):
+        """The sampled trio is the greedy-vs-sampled throughput
+        trajectory: rows must pin the sampling params (so the record is
+        comparable across PRs) and carry finite tok/s; spec-sampled is
+        the acceptance-rate-under-sampling signal."""
+        sampled = [r for r in record["rows"]
+                   if r["mode"] in ("sampled-dense", "sampled",
+                                    "spec-sampled")]
+        assert sampled
+        for r in sampled:
+            assert r["sampling"] == {"temperature": 0.8, "top_k": 0,
+                                     "top_p": 0.95}, r
+            assert math.isfinite(r["tokens_per_s"]) and r["tokens_per_s"] > 0
+        greedy_modes = {r["mode"] for r in record["rows"]
+                        if "sampling" not in r}
+        assert greedy_modes == {"dense", "packed", "paged", "paged-int8",
+                                "spec"}
 
     def test_speculative_record_clears_bar(self, record):
         """The acceptance criterion: >= 1.5x fewer engine steps per
@@ -87,6 +107,9 @@ class TestBenchRecord:
         assert rec["prefix"]["grouped_requests"] > 0
         assert rec["engine"]["shared_prompt_tokens"] > 0  # Zipf prefixes hit
         assert rec["leaked_pages"] == 0
+        # the replay exercises the sampling path with per-request seeds
+        assert rec["sampling"]["temperature"] > 0
+        assert rec["sampling"]["per_request_seeds"] is True
 
     def test_int8_rows_and_admission_record(self, record):
         """int8 rows carry a token-match rate (the allclose tier) and the

@@ -166,6 +166,23 @@ def test_packed_layout_invariants(state, slack):
         if toks:
             assert lay.spans[slot] == (idx[0], len(toks))
 
+    # without out_base the sampler key indices are all zero; with it,
+    # each entry carries base + offset clamped at 0 (discarded prefill
+    # columns), and padding entries stay zero
+    assert (lay.out_idx == 0).all()
+    bases = {slot: pos0 - 3 for slot, pos0, _ in grants}
+    lay2 = pack_step(grants, capacity, out_base=bases)
+    for slot, pos0, toks in grants:
+        if not toks:
+            continue
+        j, m = lay2.spans[slot]
+        np.testing.assert_array_equal(
+            lay2.out_idx[j : j + m],
+            np.maximum(bases[slot] + np.arange(m), 0),
+        )
+    assert (lay2.out_idx[total:] == 0).all()
+    assert (lay2.out_idx >= 0).all()
+
     # overflow is loud, not truncating
     if total > 0:
         import pytest as _pytest

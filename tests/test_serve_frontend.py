@@ -369,6 +369,105 @@ class TestBackpressure:
 
 
 # ---------------------------------------------------------------------------
+# met_deadline: never a TypeError, False without a first token
+# ---------------------------------------------------------------------------
+
+
+class TestMetDeadline:
+    """``met_deadline`` compares ``ttft <= deadline_s`` — both can be
+    None.  The contract: a request that never produced a first token
+    (dropped, cancelled, or still queued) is ``False``, never a
+    ``TypeError``, with or without a deadline set."""
+
+    def test_cancelled_before_first_token(self, params):
+        async def go():
+            eng = make_engine(params, batch_slots=1)
+            async with AsyncEngine(eng) as fe:
+                blocker = await fe.submit(make_prompts()[2], 8)
+                # queued behind the blocker: cancelled with no tokens,
+                # one with a deadline and one without
+                v1 = await fe.submit(make_prompts()[0], 4, deadline_s=60.0)
+                v2 = await fe.submit(make_prompts()[1], 4)
+                v1.cancel()
+                v2.cancel()
+                await asyncio.gather(
+                    blocker.collect(), v1.collect(), v2.collect()
+                )
+                return blocker, v1, v2
+
+        blocker, v1, v2 = asyncio.run(go())
+        assert blocker.status == "finished" and blocker.met_deadline
+        for v in (v1, v2):
+            assert v.status == "cancelled" and v.ttft is None
+            assert v.met_deadline is False  # no first token -> False
+
+    def test_queue_timeout_drop_without_deadline(self, params):
+        """The shape the old expression would have TypeError'd on:
+        dropped before any token, ``deadline_s=None`` — the
+        ``self.deadline_s is None`` arm short-circuits True while
+        ``ttft`` is still None."""
+
+        async def go():
+            eng = make_engine(params, batch_slots=1, max_queue=1)
+            async with AsyncEngine(eng, queue_timeout=0.0) as fe:
+                a = await fe.submit(make_prompts()[2], 6)
+                b = await fe.submit(make_prompts()[0], 2)  # shed, no deadline
+                await asyncio.gather(a.collect(), b.collect())
+                return a, b
+
+        a, b = asyncio.run(go())
+        assert b.status == "dropped" and b.ttft is None
+        assert b.met_deadline is False
+        assert a.met_deadline is True
+
+    def test_before_first_token_is_false_not_error(self, params):
+        async def go():
+            eng = make_engine(params)
+            async with AsyncEngine(eng) as fe:
+                s = await fe.submit(make_prompts()[0], 2)
+                early = s.met_deadline  # queued: ttft is None
+                await s.collect()
+                return early, s
+
+        early, s = asyncio.run(go())
+        assert early is False
+        assert s.met_deadline is True
+
+
+# ---------------------------------------------------------------------------
+# sampling passes through the front-end
+# ---------------------------------------------------------------------------
+
+
+class TestFrontendSampling:
+    def test_sampled_streams_match_sync_driver(self, params):
+        """submit(sampling=...) threads SamplingParams to the engine:
+        async streams == the synchronous driver's seeded streams."""
+        from repro.serve import SamplingParams
+
+        prompts = make_prompts()
+        sp = SamplingParams(temperature=0.8, top_p=0.95)
+        eng = make_engine(params)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=4,
+                               sampling=sp.with_seed(i)))
+        eng.run()
+        want = {u: r.output for u, r in eng.finished.items()}
+
+        async def go():
+            eng2 = make_engine(params)
+            async with AsyncEngine(eng2) as fe:
+                streams = [
+                    await fe.submit(p, 4, sampling=sp.with_seed(i))
+                    for i, p in enumerate(prompts)
+                ]
+                outs = await asyncio.gather(*(s.collect() for s in streams))
+            return {s.uid: out for s, out in zip(streams, outs)}
+
+        assert asyncio.run(go()) == want
+
+
+# ---------------------------------------------------------------------------
 # Step callbacks and the step log
 # ---------------------------------------------------------------------------
 

@@ -76,6 +76,17 @@ class TestWorkloadGeneration:
             traffic_replay.build_workload(10, VOCAB, 0, prefix_len=64,
                                           max_prompt=64)
 
+    def test_per_request_sampling_seeds(self):
+        """Every arrival carries a workload-seeded sampling seed: pinned
+        by the workload seed (reproducible replays) and non-constant
+        (requests don't share a stream)."""
+        a, b = small_workload(), small_workload()
+        assert [w.seed for w in a] == [w.seed for w in b]
+        assert len({w.seed for w in a}) > 1
+        assert all(0 <= w.seed < 2**31 for w in a)
+        c = small_workload(seed=6)
+        assert [w.seed for w in a] != [w.seed for w in c]
+
 
 class TestCommonGenerators:
     def test_make_requests_deterministic(self):
@@ -93,6 +104,22 @@ class TestCommonGenerators:
         assert [r.prompt for r in a] == [r.prompt for r in b]
         lens = [len(r.prompt) for r in a]
         assert lens == [8, 32, 8, 32, 8, 32]  # alternating short/long
+
+    def test_sampling_param_reseeds_per_request(self):
+        """``sampling=`` attaches per-uid re-seeded params without
+        perturbing the prompt stream (existing workloads replay
+        token-identically whether or not sampling is on)."""
+        from repro.serve import SamplingParams
+
+        sp = SamplingParams(temperature=0.8, top_p=0.95, seed=100)
+        plain = common.make_requests(6, 16, 4, VOCAB, seed=3)
+        sampled = common.make_requests(6, 16, 4, VOCAB, seed=3, sampling=sp)
+        assert [r.prompt for r in plain] == [r.prompt for r in sampled]
+        assert [r.sampling.seed for r in sampled] == list(range(100, 106))
+        assert all(r.sampling.temperature == 0.8 for r in sampled)
+        assert all(r.sampling.greedy for r in plain)
+        mixed = common.mixed_requests(6, 32, 4, VOCAB, seed=2, sampling=sp)
+        assert [r.sampling.seed for r in mixed] == list(range(100, 106))
 
     def test_seeded_prompts_prefix_draw_order(self):
         """shared_prefix=0 must consume nothing from the stream — the
@@ -133,6 +160,10 @@ class TestReplaySmoke:
         assert good["met_requests"] <= outcomes["finished"]
         assert good["met_tokens_per_s"] <= good["tokens_per_s"]
         assert rec["engine"]["mode"] == "packed+paged"
+        # default replay is stochastic with per-request seeds
+        assert rec["sampling"] == {"temperature": 0.8, "top_k": 0,
+                                   "top_p": 0.95,
+                                   "per_request_seeds": True}
 
     def test_zero_leaked_pages(self, record):
         rec, _ = record
