@@ -3,12 +3,21 @@
 Left: 32 accumulations, varying workers (16..112): the benefit grows with
 scale.  Right: 112 workers, varying accumulations — diminishing returns
 with more accumulations.  Post-analysis of no-drop runs, as in the paper.
+
+A third "trajectory" panel comes from a *real* training run (not
+post-analysis): per-step drop rate and the tau in effect, straight off
+``TrainResult.drop_rates`` / ``TrainResult.tau_series`` with the online
+controller adapting to a fault scenario mid-run.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import PAPER_DELAY, simulate
+from repro.core import DropConfig, PAPER_DELAY, simulate
+from repro.data import DataConfig
+from repro.models import ModelConfig
+from repro.train import TrainConfig, train
+from repro.train.resilience import ControllerConfig, make_scenario
 
 from .common import write_rows
 
@@ -21,6 +30,31 @@ def _speedup_vs_droprate(sim, n_points=25):
         out.append((1.0 - float(frac.mean()), sim.effective_speedup(tau)))
     out.sort()
     return out
+
+
+_TINY = ModelConfig(
+    name="fig4", n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+    vocab_size=131, dtype="float32", remat=False,
+)
+_DATA = DataConfig(vocab_size=131, seq_len=32, batch_size=64, strategy="pack", seed=0)
+
+
+def _trajectory_rows(steps: int):
+    """Per-step (drop_rate, tau) off a real online-tau run under faults."""
+    res = train(_TINY, _DATA, TrainConfig(
+        steps=steps, n_workers=8, microbatches=8, lr=1e-3, seed=0,
+        drop=DropConfig(enabled=True, tau=float("inf")), online_tau=True,
+        controller=ControllerConfig(warmup_steps=16, check_every=8),
+        latency=make_scenario("pareto", seed=0, onset=steps // 2),
+        tc=0.5, telemetry_window=32,
+    ))
+    taus = res.tau_series()
+    return res, [
+        {"panel": "trajectory", "workers": 8, "accumulations": 8,
+         "drop_rate": float(d), "speedup": 1.0, "step": i,
+         "tau": (None if not np.isfinite(taus[i]) else float(taus[i]))}
+        for i, d in enumerate(res.drop_rates)
+    ]
 
 
 def run(quick: bool = True):
@@ -38,6 +72,9 @@ def run(quick: bool = True):
                          "drop_rate": dr, "speedup": s})
     write_rows("fig4_droprate", rows)
 
+    traj_res, traj_rows = _trajectory_rows(60 if quick else 100)
+    write_rows("fig4_droprate", traj_rows, fname="trajectory.csv")
+
     def best(panel, key, val):
         return max(
             (r["speedup"] for r in rows if r["panel"] == panel and r[key] == val and r["drop_rate"] < 0.12),
@@ -49,4 +86,6 @@ def run(quick: bool = True):
         {"name": "fig4/best_speedup_112w", "value": round(best("left", "workers", 112), 4)},
         {"name": "fig4/best_speedup_m4", "value": round(best("right", "accumulations", 4), 4)},
         {"name": "fig4/best_speedup_m64", "value": round(best("right", "accumulations", 64), 4)},
+        {"name": "fig4/traj_tau_changes", "value": len(traj_res.tau_trajectory) - 1},
+        {"name": "fig4/traj_mean_drop", "value": round(float(np.mean(traj_res.drop_rates)), 4)},
     ]

@@ -16,6 +16,7 @@ MODULES = [
     "fig3_seff",
     "fig4_droprate",
     "fig5_training",
+    "train_tail",
     "table1_generalization",
     "fig12_localsgd",
     "fig13_noise",

@@ -1,10 +1,18 @@
 """Cluster-scale what-if analysis: is DropCompute worth it on YOUR cluster?
 
     PYTHONPATH=src python examples/straggler_sim.py --workers 256 --noise lognormal
+    PYTHONPATH=src python examples/straggler_sim.py --faults badnode --onset 100
 
 Feeds a latency model (or swap in real measured micro-batch times) through
 Algorithm 2 and the closed-form theory (§4) to report: expected iteration
 time, E[T]/E[T_n] straggler ratio, tau*, and the scale curve.
+
+``--faults`` layers a seeded ``repro.train.resilience`` fault scenario
+(pareto / lognormal / badnode / stall / none) over the base model and
+additionally replays the *online* tau controller against the stream —
+showing how tau* moves when the cluster degrades mid-run, and what a
+one-shot calibration would have missed.  Everything is deterministic in
+``--seed``: rerunning prints identical numbers.
 """
 import argparse
 
@@ -18,7 +26,52 @@ from repro.core import (
     scale_curve,
     simulate,
 )
+from repro.core.simulate import SimResult
 from repro.core.threshold import select_threshold
+from repro.train.resilience import (
+    SCENARIOS,
+    ComputeTelemetry,
+    ControllerConfig,
+    TauController,
+    make_scenario,
+)
+
+
+def _fault_report(model: LatencyModel, args) -> None:
+    """Simulate the fault scenario and replay static vs online tau on it."""
+    n, m, iters = args.workers, args.accumulations, args.iters
+    lat = make_scenario(args.faults, base=model, seed=args.seed, onset=args.onset)
+    t = np.stack([lat.sample_at(s, n, m, seed=args.seed) for s in range(iters)])
+
+    pre, post = t[: args.onset], t[args.onset :]
+    print(f"\nfault scenario '{args.faults}' (seed={args.seed}, onset={args.onset}):")
+    for name, seg in (("pre-onset", pre), ("post-onset", post)):
+        if not len(seg):
+            continue
+        res = select_threshold(seg, args.tc)
+        print(f"  {name:10s}: E[T]={seg.sum(-1).max(-1).mean():6.2f}s  "
+              f"tau*={res.tau:6.2f}s  S_eff={res.speedup:.4f}")
+
+    # static: one-shot Algorithm 2 on the calibration prefix; online: the
+    # TauController re-estimating from a rolling telemetry window
+    calib = min(20, args.onset or 20)
+    static_tau = select_threshold(t[:calib], args.tc).tau
+    tel = ComputeTelemetry(n, m, window=32)
+    ctl = TauController(ControllerConfig(warmup_steps=16, check_every=8),
+                        tc=args.tc, total_steps=iters)
+    for s in range(iters):
+        tel.record(s, t[s], tau=ctl.tau)
+        ctl.maybe_update(s, tel, steps_remaining=iters - s)
+    print(f"  static (calibrated on first {calib} steps): tau = {static_tau:.2f}s")
+    print("  online trajectory: "
+          + " -> ".join(f"step {s}: tau={tau:.2f}" if np.isfinite(tau)
+                        else f"step {s}: tau=inf"
+                        for s, tau in ctl.trajectory))
+    t_n = t.sum(axis=-1)
+    sim_res = SimResult(t=t, T_n=t_n, T=t_n.max(axis=-1), tc=args.tc)
+    for label, tau in (("static", static_tau), ("online", ctl.tau)):
+        s_eff = sim_res.effective_speedup(tau)
+        print(f"  S_eff over the full faulty run with {label} tau: {s_eff:.4f}")
 
 
 def main():
@@ -30,12 +83,19 @@ def main():
     ap.add_argument("--mean", type=float, default=0.5)
     ap.add_argument("--var", type=float, default=0.25)
     ap.add_argument("--tc", type=float, default=0.5)
+    ap.add_argument("--faults", default="",
+                    choices=[""] + sorted(SCENARIOS),
+                    help="layer a resilience fault scenario over the model")
+    ap.add_argument("--onset", type=int, default=100,
+                    help="step where mid-run faults (ramp/badnode) begin")
+    ap.add_argument("--iters", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     model = LatencyModel(base=0.45, noise=NoiseModel(kind=args.noise, mean=args.mean, var=args.var))
     n, m = args.workers, args.accumulations
 
-    sim = simulate(model, 200, n, m, tc=args.tc, seed=0)
+    sim = simulate(model, args.iters, n, m, tc=args.tc, seed=args.seed)
     print(f"workers={n} accumulations={m} noise={args.noise}")
     print(f"  E[T_n] (one worker) = {sim.T_n.mean():.2f}s")
     print(f"  E[T]  (slowest)     = {sim.T.mean():.2f}s   ratio {sim.T.mean()/sim.T_n.mean():.3f}")
@@ -51,6 +111,9 @@ def main():
     curve_d = scale_curve(model, [8, 32, 128, n], m, args.tc, iters=100, tau=res.tau)
     for w in (8, 32, 128, n):
         print(f"  N={w:5d}: baseline {curve_b[w][1]:.3f}   dropcompute {curve_d[w][1]:.3f}")
+
+    if args.faults:
+        _fault_report(model, args)
 
 
 if __name__ == "__main__":

@@ -108,6 +108,17 @@ class LatencyModel:
             t = t + hit * (self.straggler_delay / m)
         return t
 
+    def sample_at(
+        self, step: int, workers: int, m: int, seed: Optional[int] = 0
+    ) -> np.ndarray:
+        """One step's (N, M) draw keyed by ``(seed, step)`` — the same
+        distribution as ``sample`` but deterministic per step regardless of
+        call order, so a checkpointed run resumes onto the identical
+        latency stream.  Fault scenarios (``train.resilience.faults``)
+        override this with their perturbation stack."""
+        rng = np.random.default_rng([0 if seed is None else seed, step])
+        return self.sample(rng, 1, workers, m)[0]
+
     @property
     def mean(self) -> float:
         return self.base * (1.0 + self.noise_mean)

@@ -32,26 +32,50 @@ class ThresholdResult:
         )
 
 
+def fill_profile_nans(latencies: np.ndarray) -> np.ndarray:
+    """Fill NaN micro-batch times with their column mean (over I and N).
+
+    ``HostTimedEngine.profile()`` NaN-pads micro-batches a worker dropped;
+    Algorithm 2 wants a dense profile, and the best unbiased stand-in for
+    a never-run accumulation is the mean time of that accumulation slot
+    where it *was* run.  Columns with no observations fall back to the
+    global mean.  No-op (same array returned) when nothing is NaN.
+    """
+    lat = np.asarray(latencies, dtype=np.float64)
+    if not np.isnan(lat).any():
+        return lat
+    col = np.nanmean(lat, axis=(0, 1), keepdims=True) if lat.ndim == 3 else np.nanmean(lat)
+    col = np.where(np.isnan(col), np.nanmean(lat), col)
+    return np.where(np.isnan(lat), col, lat)
+
+
 def select_threshold(
     latencies: np.ndarray,
     tc,
     grid: Optional[Sequence[float]] = None,
     grid_size: int = 256,
     min_microbatches: int = 1,
+    max_drop: Optional[float] = None,
 ) -> ThresholdResult:
     """Algorithm 2: pick tau* maximizing the mean per-iteration S_eff.
 
     Args:
       latencies: (I, N, M) micro-batch times t_{i,n}^{(m)} gathered from all
-        N workers over I profiling iterations.
+        N workers over I profiling iterations.  NaNs (host-timed profiles of
+        partially-dropped steps) are filled via :func:`fill_profile_nans`.
       tc: scalar or (I,) per-iteration communication/serial time.
       grid: candidate thresholds; default = linspace over observed range.
+      max_drop: optional drop-rate ceiling — tau* is restricted to grid
+        points whose mean completion is >= 1 - max_drop (the online
+        controller's guardrail).  If no grid point qualifies, the
+        highest-completion point wins.
 
     Returns ThresholdResult with tau* = argmax_tau mean_i S_i(tau).
     """
     lat = np.asarray(latencies, dtype=np.float64)
     if lat.ndim != 3:
         raise ValueError(f"latencies must be (I, N, M), got {lat.shape}")
+    lat = fill_profile_nans(lat)
     i_, n_, m_ = lat.shape
     tc = np.broadcast_to(np.asarray(tc, dtype=np.float64), (i_,))
 
@@ -90,13 +114,20 @@ def select_threshold(
     s_i = s_step * (m_tilde / m_)  # effective speedup per iteration
     s_eff = s_i.mean(axis=1)  # (G,)
 
-    k = int(np.argmax(s_eff))
+    completion = (m_tilde / m_).mean(axis=1)  # (G,)
+    if max_drop is not None:
+        allowed = completion >= 1.0 - max_drop
+        if not allowed.any():
+            allowed = completion >= completion.max()
+        k = int(np.argmax(np.where(allowed, s_eff, -np.inf)))
+    else:
+        k = int(np.argmax(s_eff))
     return ThresholdResult(
         tau=float(grid[k]),
         speedup=float(s_eff[k]),
         grid=grid,
         speedups=s_eff,
-        completion=(m_tilde / m_).mean(axis=1),
+        completion=completion,
         step_speedup=s_step.mean(axis=1),
     )
 

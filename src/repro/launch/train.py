@@ -21,6 +21,7 @@ from repro.core import DropConfig, LatencyModel, NoiseModel
 from repro.data import DataConfig
 from repro.dist import Distribution
 from repro.train import TrainConfig, train
+from repro.train.resilience import SCENARIOS, make_scenario
 
 
 def main():
@@ -43,7 +44,21 @@ def main():
     ap.add_argument("--normalize", default="computed", choices=["computed", "nominal"])
     ap.add_argument("--noise", default="paper_lognormal")
     ap.add_argument("--tc", type=float, default=0.5)
+    ap.add_argument("--faults", default="", choices=[""] + sorted(SCENARIOS),
+                    help="seeded resilience fault scenario layered over the "
+                         "latency model (pareto/lognormal/badnode/stall/none)")
+    ap.add_argument("--fault-onset", type=int, default=None,
+                    help="step where mid-run faults (ramp/badnode) begin")
+    ap.add_argument("--online-tau", action="store_true",
+                    help="re-estimate tau* online from rolling telemetry "
+                         "(replaces the one-shot --auto-threshold calibration)")
+    ap.add_argument("--inject-real-delays", action="store_true",
+                    help="sleep the injected fault delays around the real "
+                         "step (physical compute variance)")
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--resume", default="",
+                    help="checkpoint dir to resume from (params, opt state "
+                         "AND the adapted tau-controller state)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default="",
                     help="mesh dims: 'data,model' (e.g. 4,2) or "
@@ -59,19 +74,29 @@ def main():
 
     data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                       batch_size=args.batch, strategy="pack", seed=args.seed)
+    latency = LatencyModel(base=0.45, noise=NoiseModel(kind=args.noise))
+    if args.faults:
+        latency = make_scenario(args.faults, base=latency, seed=args.seed,
+                                onset=args.fault_onset)
     tcfg = TrainConfig(
         steps=args.steps, n_workers=args.workers, microbatches=args.microbatches,
         optimizer=args.optimizer, lr=args.lr,
         drop=DropConfig(enabled=args.drop_compute, tau=args.tau, normalize=args.normalize),
-        auto_threshold=args.auto_threshold, calibration_steps=min(20, args.steps // 2),
-        latency=LatencyModel(base=0.45, noise=NoiseModel(kind=args.noise)),
-        tc=args.tc, seed=args.seed, mesh=dist,
+        auto_threshold=args.auto_threshold and not args.online_tau,
+        calibration_steps=min(20, args.steps // 2),
+        online_tau=args.online_tau, inject_real_delays=args.inject_real_delays,
+        latency=latency, tc=args.tc, seed=args.seed, mesh=dist,
         ckpt_dir=args.ckpt or None, ckpt_every=50 if args.ckpt else 0,
+        resume_from=args.resume or None,
     )
     r = train(cfg, data, tcfg)
     print(f"[train] loss {r.losses[0]:.3f} -> {r.losses[-1]:.3f}  "
           f"sim time {r.metrics['total_sim_time']:.0f}s  "
           f"drop {np.mean(r.drop_fractions):.1%}  tau={r.tau}")
+    if len(r.tau_trajectory) > 1:
+        print("[train] tau trajectory: "
+              + " -> ".join(f"{s}:{t:.2f}" if np.isfinite(t) else f"{s}:inf"
+                            for s, t in r.tau_trajectory))
 
 
 if __name__ == "__main__":

@@ -44,7 +44,7 @@ def save(path: str, tree: PyTree, step: int, extra: Optional[dict] = None, shard
     np.savez(os.path.join(path, f"arrays{shard_suffix}.npz"), **arrays)
     meta = {"step": int(step), "extra": extra or {}, "keys": sorted(arrays)}
     with open(os.path.join(path, "meta.json"), "w") as f:
-        json.dump(meta, f)
+        json.dump(meta, f, default=float)  # numpy scalars in extra
 
 
 def restore(path: str, template: PyTree, shard_suffix: str = "") -> Tuple[PyTree, int]:
@@ -75,3 +75,24 @@ def latest_step(path: str) -> Optional[int]:
         return None
     with open(meta) as f:
         return json.load(f)["step"]
+
+
+def load_extra(path: str) -> Optional[dict]:
+    """The ``extra`` metadata dict saved alongside the arrays (``None`` if
+    no checkpoint exists).  The trainer keeps its tau-controller state here
+    — current tau, tau trajectory, telemetry summary — so a restarted run
+    resumes with its *adapted* threshold instead of re-calibrating."""
+    meta = os.path.join(path, "meta.json")
+    if not os.path.exists(meta):
+        return None
+    with open(meta) as f:
+        return json.load(f).get("extra") or {}
+
+
+def resilience_state(path: str) -> Optional[dict]:
+    """Convenience accessor for the tau-controller/telemetry state blob
+    (see ``trainer.train``'s checkpoint writes)."""
+    extra = load_extra(path)
+    if not extra:
+        return None
+    return extra.get("resilience")

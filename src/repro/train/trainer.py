@@ -2,21 +2,34 @@
 
 The trainer virtualizes N data-parallel workers on whatever devices exist:
 each step draws a (N, M) micro-batch latency tensor from a ``LatencyModel``
-(or records real wall-clock times via HostTimedEngine), derives the
-Algorithm-1 drop mask, and accumulates masked gradients.  Simulated
-iteration time
+(or a ``resilience.faults`` scenario wrapping one), derives the Algorithm-1
+drop mask, and accumulates masked gradients.  Simulated iteration time
 
     T_iter = max_n min(T_n, tau) + T_c
 
 is tracked per step so loss-vs-wallclock curves (paper fig. 5) come out of
-any run.  Threshold selection (Algorithm 2) runs automatically after
-``calibration_steps`` profiling steps when ``drop.tau`` is unset.
+any run.
+
+Threshold selection runs in one of two modes:
+
+* **static** (``auto_threshold=True``): the original one-shot Algorithm 2
+  after ``calibration_steps`` profiling steps;
+* **online** (``online_tau=True``): a ``resilience.TauController``
+  re-estimates tau* from the rolling telemetry window during the run —
+  with hysteresis, drop guardrails and a recompile-amortization gate,
+  since on the SPMD path tau is baked into the traced drop mask and every
+  change costs a ``build_bundle`` rebuild.
+
+Per-step compute telemetry (simulated draws reconciled with the monotonic
+host clock around the jitted step) is always collected; the controller
+state and telemetry summary ride checkpoints, so a restarted run resumes
+with its adapted tau instead of re-calibrating from scratch.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +44,7 @@ from ..dist import Distribution
 from ..models import InputShape, ModelConfig, init_params, loss_fn
 from ..optim import apply_updates, clip_by_global_norm, make as make_opt
 from . import checkpoint as ckpt
+from .resilience import ComputeTelemetry, ControllerConfig, TauController
 
 PyTree = Any
 
@@ -50,7 +64,16 @@ class TrainConfig:
     latency: LatencyModel = dataclasses.field(default_factory=LatencyModel)
     tc: float = 0.5  # serial/communication seconds per iteration
     calibration_steps: int = 20  # Algorithm 2 profiling window
-    auto_threshold: bool = False
+    auto_threshold: bool = False  # static: one-shot tau* after calibration
+    # Online tau (repro.train.resilience): re-estimate tau* from rolling
+    # telemetry during the run; ``controller`` overrides the default knobs.
+    online_tau: bool = False
+    controller: Optional[ControllerConfig] = None
+    telemetry_window: int = 64
+    # Fault scenarios already live in ``latency`` (a FaultyLatencyModel);
+    # set this to additionally *sleep* the injected delays around the real
+    # step (physical compute variance on SPMD runs).
+    inject_real_delays: bool = False
     # Distribution: None = single-device virtual-worker loop; a mesh spec
     # ("4,2", a dim tuple, or a repro.dist.Distribution) switches to the
     # sharded SPMD step built by ``Distribution.train_step``.
@@ -59,6 +82,7 @@ class TrainConfig:
     log_every: int = 10
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0
+    resume_from: Optional[str] = None  # checkpoint dir to resume from
 
 
 @dataclasses.dataclass
@@ -66,13 +90,34 @@ class TrainResult:
     params: PyTree
     losses: List[float]
     sim_times: List[float]  # simulated seconds per iteration
-    drop_fractions: List[float]
-    tau: float
+    drop_fractions: List[float]  # per-step drop rate (1 - completed fraction)
+    tau: float  # final threshold (back-compat scalar)
     metrics: Dict[str, Any]
+    # (step, tau) at every threshold change, starting with the initial tau;
+    # the full trajectory, not just the final scalar.
+    tau_trajectory: List[Tuple[int, float]] = dataclasses.field(default_factory=list)
+    telemetry: Optional[Dict[str, Any]] = None  # ComputeTelemetry.summary()
 
     @property
     def cum_time(self) -> np.ndarray:
         return np.cumsum(self.sim_times)
+
+    @property
+    def drop_rates(self) -> List[float]:
+        """Per-step drop rate; alias of ``drop_fractions`` under the name
+        the benchmark/figure scripts use."""
+        return self.drop_fractions
+
+    def tau_series(self, start_step: int = 0) -> np.ndarray:
+        """Per-step tau in effect, aligned with ``losses`` (len(losses),)."""
+        n = len(self.losses)
+        out = np.full(n, np.inf)
+        traj = self.tau_trajectory or [(start_step, self.tau)]
+        for step, tau in traj:
+            i = max(int(step) - start_step, 0)
+            if i < n:
+                out[i:] = tau
+        return out
 
 
 def _resolve_dist(mesh) -> Optional[Distribution]:
@@ -105,6 +150,13 @@ def _make_step(model_cfg: ModelConfig, tcfg: TrainConfig, lr_fn):
     return opt, jax.jit(step)
 
 
+def _latencies_at(tcfg: TrainConfig, step: int, n: int, m: int) -> np.ndarray:
+    """The step's (N, M) latency draw, keyed by (seed, step) so resumed
+    runs replay the identical stream (``sample_at`` seam on both
+    ``LatencyModel`` and ``resilience.FaultyLatencyModel``)."""
+    return np.asarray(tcfg.latency.sample_at(step, n, m, seed=tcfg.seed + 1))
+
+
 def train(
     model_cfg: ModelConfig,
     data_cfg: DataConfig,
@@ -124,6 +176,7 @@ def train(
     # --- distribution: resolve the SPMD path up front --------------------
     dist = _resolve_dist(tcfg.mesh)
     bundle = None
+    build_s = 0.0  # measured bundle-build cost (the recompile the gate amortizes)
     if dist is not None:
         shape = InputShape(
             "train_cli", data_cfg.seq_len, data_cfg.batch_size, "train",
@@ -141,7 +194,9 @@ def train(
                 clip_norm=tcfg.clip_norm, weight_decay=wd,
             )
 
+        b0 = time.monotonic()
         bundle = build_bundle(tcfg.drop.tau)
+        build_s = time.monotonic() - b0
         opt = bundle.opt
         params = dist.shard(params)
         opt_state = opt.init(params)
@@ -149,12 +204,60 @@ def train(
         opt, step_fn = _make_step(model_cfg, tcfg, lambda s: tcfg.lr)
         opt_state = opt.init(params)
 
-    lat_rng = np.random.default_rng(tcfg.seed + 1)
     tau = tcfg.drop.tau
     profile: List[np.ndarray] = []
 
+    # --- resilience: telemetry always on, controller when online_tau -----
+    telemetry = ComputeTelemetry(n, m, window=tcfg.telemetry_window)
+    controller: Optional[TauController] = None
+    if tcfg.online_tau and tcfg.drop.enabled:
+        ccfg = tcfg.controller or ControllerConfig(
+            min_microbatches=tcfg.drop.min_microbatches
+        )
+        controller = TauController(
+            ccfg, tcfg.tc, tau=tau, total_steps=tcfg.steps,
+            default_recompile_cost_s=build_s if bundle is not None else 0.0,
+        )
+
+    # --- resume: params/opt/step plus the adapted tau + controller state --
+    start_step = 0
+    if tcfg.resume_from:
+        restored, start_step = ckpt.restore(
+            tcfg.resume_from, {"params": params, "opt": opt_state}
+        )
+        params, opt_state = restored["params"], restored["opt"]
+        if dist is not None:
+            params = dist.shard(params)
+        state = ckpt.resilience_state(tcfg.resume_from)
+        if state:
+            tau = float("inf") if state.get("tau") is None else float(state["tau"])
+            if controller is not None and state.get("controller"):
+                controller.load_state_dict(state["controller"])
+                tau = controller.tau
+            if state.get("telemetry"):
+                telemetry.load_state_dict(state["telemetry"])
+            if bundle is not None and tau != tcfg.drop.tau:
+                bundle = build_bundle(tau)
+
+    trajectory: List[Tuple[int, float]] = [(start_step, tau)]
+
+    def _save_ckpt(step_now: int):
+        res_state = {
+            "tau": None if not np.isfinite(tau) else float(tau),
+            "controller": controller.state_dict() if controller else None,
+            "telemetry": telemetry.state_dict(),
+            "trajectory": [
+                [int(s), (None if not np.isfinite(t) else float(t))]
+                for s, t in (controller.trajectory if controller else trajectory)
+            ],
+        }
+        ckpt.save(
+            tcfg.ckpt_dir, {"params": params, "opt": opt_state}, step_now,
+            extra={"resilience": res_state},
+        )
+
     losses, sim_times, drops = [], [], []
-    for step in range(tcfg.steps):
+    for step in range(start_step, tcfg.steps):
         if dist is None:
             mbs = microbatches_at(step, data_cfg, total_m)
             mbs = {k: jnp.asarray(v) for k, v in mbs.items() if k != "lengths"}
@@ -163,12 +266,14 @@ def train(
             mbs = {k: jnp.asarray(b[k]) for k in ("tokens", "weights")}
 
         # --- latency draws for the N virtual workers (Algorithm 1 input) ---
-        t = tcfg.latency.sample(lat_rng, 1, n, m)[0]  # (N, M)
+        t = _latencies_at(tcfg, step, n, m)
         profile.append(t)
 
-        # --- Algorithm 2: pick tau* after the calibration window ---
+        # --- threshold selection -------------------------------------------
+        # static: one-shot Algorithm 2 after the calibration window
         if (
             tcfg.auto_threshold
+            and not tcfg.online_tau
             and tcfg.drop.enabled
             and not np.isfinite(tau)
             and step == tcfg.calibration_steps
@@ -176,10 +281,22 @@ def train(
             prof = np.stack(profile)  # (I, N, M)
             res = select_threshold(prof, tcfg.tc)
             tau = res.tau
+            trajectory.append((step, tau))
             if bundle is not None:
                 # tau is baked into the traced drop mask: rebuild (one
                 # recompile per calibration, not per step)
                 bundle = build_bundle(tau)
+
+        # online: the controller re-estimates tau* from the rolling window
+        if controller is not None:
+            decision = controller.maybe_update(
+                step, telemetry, steps_remaining=tcfg.steps - step
+            )
+            if decision.applied:
+                tau = decision.tau
+                trajectory.append((step, tau))
+                if bundle is not None:
+                    bundle = build_bundle(tau)
 
         # --- drop mask (per worker), flattened onto the microbatch axis ---
         if tcfg.drop.enabled and np.isfinite(tau):
@@ -189,6 +306,16 @@ def train(
         else:
             mask_nm = np.ones((n, m), np.float32)
 
+        # --- optionally turn the scenario into physical delay --------------
+        if tcfg.inject_real_delays and hasattr(tcfg.latency, "host_delay_at"):
+            worst = max(
+                tcfg.latency.host_delay_at(step, r, n, m, seed=tcfg.seed + 1)
+                for r in range(n)
+            )
+            if worst > 0:
+                time.sleep(worst)
+
+        h0 = time.monotonic()
         if bundle is not None:
             params, opt_state, metrics = bundle(params, opt_state, mbs, jnp.asarray(t))
             loss = metrics["loss"]
@@ -196,24 +323,37 @@ def train(
         else:
             mask = jnp.asarray(mask_nm.reshape(total_m))
             params, opt_state, loss, stats = step_fn(params, opt_state, mbs, mask)
+        jax.block_until_ready(loss)
+        host_step_s = time.monotonic() - h0
 
         # --- simulated iteration time (eq. in §4.3) ---
         t_workers = (t * mask_nm).sum(axis=-1)  # compute actually performed
         t_iter = float(t_workers.max() + tcfg.tc) if tcfg.drop.enabled and np.isfinite(tau) else float(
             t.sum(axis=-1).max() + tcfg.tc
         )
+        drop_frac = 1.0 - float(stats["completed_fraction"])
         losses.append(float(loss))
         sim_times.append(t_iter)
-        drops.append(1.0 - float(stats["completed_fraction"]))
+        drops.append(drop_frac)
+
+        telemetry.record(
+            step, t, host_step_s=host_step_s, tau=tau, drop_fraction=drop_frac
+        )
 
         if tcfg.ckpt_dir and tcfg.ckpt_every and (step + 1) % tcfg.ckpt_every == 0:
-            ckpt.save(tcfg.ckpt_dir, {"params": params, "opt": opt_state}, step + 1)
+            _save_ckpt(step + 1)
 
+    final_trajectory = list(controller.trajectory) if controller else trajectory
     metrics: Dict[str, Any] = {
         "final_loss": losses[-1] if losses else float("nan"),
         "mean_drop": float(np.mean(drops)) if drops else 0.0,
         "total_sim_time": float(np.sum(sim_times)),
+        "tau_changes": max(len(final_trajectory) - 1, 0),
+        "bundle_rebuilds": (controller.rebuilds if controller else 0) if bundle is not None else 0,
     }
     if eval_fn is not None:
         metrics["eval"] = float(eval_fn(params))
-    return TrainResult(params, losses, sim_times, drops, float(tau), metrics)
+    return TrainResult(
+        params, losses, sim_times, drops, float(tau), metrics,
+        tau_trajectory=final_trajectory, telemetry=telemetry.summary(),
+    )

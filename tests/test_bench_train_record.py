@@ -1,0 +1,89 @@
+"""The committed training-resilience record (``BENCH_train.json``)
+parses and carries every scenario x policy cell — like the serving
+record, the training benchmark trajectory is a contract.
+
+CI regenerates the record in the full lane (``benchmarks.train_tail
+--json``); this tier-1 check pins the committed copy so a PR can't
+silently drop a scenario, lose the acceptance margin, or break the
+parity contract (controller-on == no-drop when there is no tail).
+"""
+import json
+import math
+import os
+
+import pytest
+
+BENCH = os.path.join(os.path.dirname(__file__), os.pardir, "BENCH_train.json")
+
+SCENARIOS = {"none", "pareto", "lognormal", "badnode", "stall"}
+POLICIES = {"off", "static", "online"}
+
+
+@pytest.fixture(scope="module")
+def record():
+    assert os.path.exists(BENCH), "BENCH_train.json missing at the repo root"
+    with open(BENCH) as f:
+        return json.load(f)
+
+
+class TestBenchTrainRecord:
+    def test_full_sweep_present(self, record):
+        cells = {(r["scenario"], r["policy"]) for r in record["rows"]}
+        assert cells == {(s, p) for s in SCENARIOS for p in POLICIES}, cells
+
+    def test_rows_schema(self, record):
+        for r in record["rows"]:
+            assert math.isfinite(r["throughput_mb_s"]) and r["throughput_mb_s"] > 0, r
+            assert 0.0 <= r["drop_rate"] <= 1.0, r
+            assert math.isfinite(r["final_loss"]), r
+            assert math.isfinite(r["mean_iter_s"]) and r["mean_iter_s"] > 0, r
+            traj = r["tau_trajectory"]
+            assert traj and traj[0][1] is None  # every run starts at tau=inf
+            steps = [s for s, _ in traj]
+            assert steps == sorted(steps)
+            assert r["tau_changes"] == len(traj) - 1
+            last = traj[-1][1]
+            if r["tau_final"] is None:
+                assert last is None
+            else:
+                assert last == pytest.approx(r["tau_final"], abs=1e-3)
+
+    def test_off_policy_never_drops(self, record):
+        for r in record["rows"]:
+            if r["policy"] == "off":
+                assert r["drop_rate"] == 0.0 and r["tau_final"] is None, r
+
+    def test_acceptance_online_strictly_best(self, record):
+        """The PR's acceptance criterion: under the seeded pareto
+        straggler scenario online-tau beats BOTH tau=inf and the static
+        one-shot calibration, and the measured effective speedup sits in
+        the theory (eq. 11) prediction band."""
+        acc = record["acceptance"]
+        assert acc["scenario"] == "pareto"
+        assert acc["strictly_better"] is True
+        assert acc["online_vs_off"] > 1.0
+        assert acc["online_vs_static"] > 1.0
+        th = acc["theory"]
+        assert th["within_band"] is True
+        assert abs(th["ratio"] - 1.0) <= th["band"]
+        assert math.isfinite(th["measured_speedup"]) and th["measured_speedup"] > 1.0
+
+    def test_parity_no_faults_controller_noop(self, record):
+        par = record["parity"]
+        assert par["scenario"] == "none"
+        assert par["losses_identical"] is True
+        assert par["online_tau_changes"] == 0
+        assert par["online_mean_drop"] == 0.0
+
+    def test_online_adapts_on_nonstationary_scenarios(self, record):
+        """The pareto ramp must show the controller actually re-adapting
+        (>= 2 tau changes: one initial application, one post-ramp)."""
+        row = next(r for r in record["rows"]
+                   if r["scenario"] == "pareto" and r["policy"] == "online")
+        assert row["tau_changes"] >= 2, row["tau_trajectory"]
+
+    def test_config_pins_the_sweep(self, record):
+        cfg = record["config"]
+        assert set(cfg["scenarios"]) == SCENARIOS
+        assert set(cfg["policies"]) == POLICIES
+        assert cfg["steps"] >= 100 and cfg["n_workers"] >= 8

@@ -1,0 +1,76 @@
+"""Property-based tests (hypothesis) on the resilience subsystem's
+invariants: tau* scaling, ring-buffer bounds, and the recompile gate."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed; skipping property tests")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.threshold import select_threshold
+from repro.train.resilience import (
+    ComputeTelemetry,
+    ControllerConfig,
+    RingBuffer,
+    TauController,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**31 - 1),
+    st.floats(min_value=1.1, max_value=8.0),
+)
+def test_tau_star_monotone_in_latency_scale(seed, c):
+    """Scaling every fed latency (and tc) by c > 1 scales tau* with it:
+    Algorithm 2 is scale-equivariant, so tau* is monotone in the latency
+    quantiles it is fed — a uniformly slower cluster never gets a
+    *smaller* threshold."""
+    rng = np.random.default_rng(seed)
+    prof = rng.lognormal(0.0, 1.0, size=(20, 4, 6))
+    tc = 0.5
+    r1 = select_threshold(prof, tc, grid_size=64)
+    r2 = select_threshold(c * prof, c * tc, grid_size=64)
+    assert r2.tau > r1.tau
+    # equivariance up to the grid resolution
+    assert r2.tau == pytest.approx(c * r1.tau, rel=0.08)
+    assert r2.speedup == pytest.approx(r1.speedup, rel=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=16),
+    st.lists(st.floats(min_value=-1e6, max_value=1e6), min_size=0, max_size=64),
+)
+def test_ring_buffer_never_exceeds_bound(capacity, xs):
+    rb = RingBuffer(capacity)
+    for i, x in enumerate(xs):
+        rb.push(x)
+        assert len(rb) <= capacity
+        assert rb.window().shape[0] == min(i + 1, capacity)
+    # the window is exactly the most recent min(len, capacity) pushes
+    expect = xs[-min(len(xs), capacity):] if xs else []
+    np.testing.assert_allclose(rb.window(), expect)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**31 - 1),
+    st.floats(min_value=0.0, max_value=1e6),
+)
+def test_recompile_gate_never_fires_below_cost(seed, cost):
+    """Whatever the (heavy-tailed) window, a tau change is applied only
+    when predicted gain x steps remaining exceeds the recompile cost."""
+    rng = np.random.default_rng(seed)
+    tel = ComputeTelemetry(4, 6, window=16)
+    ctl = TauController(
+        ControllerConfig(warmup_steps=4, check_every=2, recompile_cost_s=cost),
+        tc=0.5,
+        total_steps=50,
+    )
+    for s in range(50):
+        tel.record(s, rng.lognormal(0.0, 1.0, size=(4, 6)), tau=ctl.tau)
+        d = ctl.maybe_update(s, tel, steps_remaining=50 - s)
+        if d.applied:
+            assert d.gain_per_step_s * (50 - s) > cost
+        elif d.reason == "not_amortized":
+            assert d.gain_per_step_s * (50 - s) <= cost
