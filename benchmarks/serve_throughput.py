@@ -458,6 +458,100 @@ def bench_speculative(params, cfg, args):
     return rec
 
 
+def bench_model_zoo(args):
+    """Model-zoo rows: the generalized cache/step contract serving
+    non-attention architectures through the same engine.
+
+    ``recurrent-chunked``: the pure-SSD ``mamba2_tiny`` config through
+    chunked prefill + packed decode — outputs must be token-identical to
+    the single-token ``decode_step`` oracle (the carried-state chunk
+    scan is exact, not approximate).
+
+    ``moe-packed``: the ``moe_tiny`` config through the packed step with
+    capacity-factor expert dispatch.  cf=inf must reproduce the dense
+    every-token-through-every-expert engine *byte-identically* (the
+    dense-parity record); the recorded row runs cf=1.0 and carries the
+    dropped-route count (``expert_overflow`` — per-expert tau).
+    """
+    import math as _math
+
+    from repro.configs import get_config
+
+    rows = []
+    new_tokens = max(args.new_tokens, 8)
+
+    def trace(cfg, plen, seed=1):
+        rng = np.random.default_rng(seed)
+        return [
+            Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=plen).tolist(),
+                    max_new_tokens=new_tokens)
+            for i in range(args.batch)
+        ]
+
+    def serve(cfg, params, plen, **kw):
+        eng = ContinuousBatcher(
+            params, cfg, batch_slots=args.batch, max_len=plen + new_tokens,
+            chunk_size=16, **kw)
+        run_once(eng, trace(cfg, plen, seed=7))  # warmup
+        eng.reset_stats()
+        done, _, total = run_once(eng, trace(cfg, plen))
+        return eng, {u: r.output for u, r in done.items()}, total
+
+    def row(mode, cfg, eng, outputs, total, plen=64, **extra):
+        summ = eng.stats_summary()
+        n_tok = sum(len(v) for v in outputs.values()) + args.batch * plen
+        return {
+            "mode": mode, "budget": None, "pattern": cfg.pattern,
+            "tokens_per_s": n_tok / total, "total_s": total,
+            "steps": eng.steps, "steps_per_token": summ["steps_per_token"],
+            "mean_ttft_ms": summ["mean_ttft"] * 1e3, **extra,
+        }
+
+    # --- recurrent-chunked --------------------------------------------
+    cfg = get_config("mamba2_tiny")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    plen = 64
+    eng, outputs, total = serve(cfg, params, plen, packed=True)
+    oracle = {}
+    for r in trace(cfg, plen):
+        cache = ContinuousBatcher(params, cfg, batch_slots=1,
+                                  max_len=plen + new_tokens, chunk_size=1)
+        cache.submit(Request(uid=0, prompt=list(r.prompt),
+                             max_new_tokens=new_tokens))
+        oracle[r.uid] = cache.run()[0].output
+    if outputs != oracle:
+        raise SystemExit(
+            "FAIL: recurrent-chunked outputs diverged from the "
+            "token-streaming oracle")
+    rows.append(row("recurrent-chunked", cfg, eng, outputs, total,
+                    decode_oracle_match=True))
+    print(f"\nrecurrent-chunked ({cfg.name}, pattern {cfg.pattern}): "
+          f"{rows[-1]['tokens_per_s']:.0f} tok/s, "
+          f"{rows[-1]['steps_per_token']:.2f} steps/token, oracle match")
+
+    # --- moe-packed ---------------------------------------------------
+    cfg = get_config("moe_tiny")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    _, dense_out, _ = serve(cfg, params, plen)  # dense-dispatch oracle
+    _, inf_out, _ = serve(cfg, params, plen, packed=True,
+                          capacity_factor=_math.inf)
+    if inf_out != dense_out:
+        raise SystemExit(
+            "FAIL: capacity dispatch at cf=inf diverged from dense MoE")
+    cf = 1.0
+    eng, outputs, total = serve(cfg, params, plen, packed=True,
+                                capacity_factor=cf)
+    ovf = eng.stats_summary()["expert_overflow_tokens"]
+    rows.append(row("moe-packed", cfg, eng, outputs, total,
+                    capacity_factor=cf, expert_overflow_tokens=ovf,
+                    cf_inf_matches_dense=True))
+    print(f"moe-packed ({cfg.name}, {cfg.n_experts} experts, cf={cf}): "
+          f"{rows[-1]['tokens_per_s']:.0f} tok/s, "
+          f"{ovf:.0f} dropped routes, cf=inf == dense-MoE outputs")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8)
@@ -506,6 +600,7 @@ def main():
 
     if args.packed:
         records = bench_modes_ab(params, cfg, args)
+        records += bench_model_zoo(args)
         prefix_rec = bench_prefix_sharing(params, cfg, args)
         payload = {
             "rows": records,

@@ -88,8 +88,21 @@ def main():
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="base sampling seed; request i streams from "
                          "seed+i, so reruns are reproducible")
+    ap.add_argument("--capacity-factor", type=float, default=0.0,
+                    help="MoE serving dispatch (needs an MoE --arch, e.g. "
+                         "moe_tiny or mixtral-8x22b): route tokens through "
+                         "fixed per-expert buffers of ceil(cf * tokens * "
+                         "top_k / n_experts) slots; overflow routes drop to "
+                         "the residual path — per-expert tau.  0 = dense "
+                         "dispatch (every token through every chosen "
+                         "expert); inf = never drop, byte-identical to "
+                         "dense")
     ap.add_argument("--arch", default="",
-                    help="optional smoke-config name (e.g. mixtral-8x22b)")
+                    help="optional smoke-config name — any pattern serves "
+                         "through this engine now: attention "
+                         "(qwen2.5-3b), MoE (mixtral-8x22b, moe_tiny), "
+                         "SSD (mamba2-130m, mamba2_tiny), RG-LRU hybrid "
+                         "(recurrentgemma-2b, hybrid_tiny)")
     args = ap.parse_args()
 
     if args.arch:
@@ -128,6 +141,7 @@ def main():
         cache=args.cache, page_size=args.page_size,
         kv_dtype=args.kv_dtype or None,
         spec=spec,
+        capacity_factor=args.capacity_factor or None,
     )
 
     sampling = None
@@ -168,6 +182,10 @@ def main():
               f"{s['draft_tokens']:.0f} drafts verified, acceptance "
               f"{s['acceptance_rate']:.2f}, "
               f"{s['steps_per_token']:.2f} engine steps per generated token")
+    if args.capacity_factor:
+        print(f"  MoE capacity dispatch (cf={args.capacity_factor}): "
+              f"{s['expert_overflow_tokens']:.0f} routes dropped to the "
+              f"residual path (max {s['max_expert_overflow']:.0f}/step)")
     r0 = done[0]
     print("sample continuation:", r0.output[:12])
 

@@ -239,6 +239,17 @@ def cache_shardings(cache: PyTree, mesh, shard_seq: bool = False) -> PyTree:
             axes = (None,) * (nd - 3) + (dp, None, "model")
         elif name in ("k", "v") and nd == 4:
             axes = (None, ("data",), "model", None) if shard_seq else (dp, None, "model", None)
+        elif name == "state" and nd >= 4:
+            # SSD recurrent state (…, num_slots, n_heads, N, head_p):
+            # slot-indexed in both layouts (never paged) — slots over the
+            # data axes, heads over "model" like attention KV.
+            axes = (None,) * (nd - 4) + (dp, "model", None, None)
+        elif name == "h" and nd >= 2:
+            # RG-LRU hidden state (…, num_slots, d_r): channels on "model".
+            axes = (None,) * (nd - 2) + (dp, "model")
+        elif name == "conv" and nd >= 3:
+            # conv windows (…, num_slots, K-1, channels), rglru and ssd.
+            axes = (None,) * (nd - 3) + (dp, None, "model")
         elif nd >= 2:
             axes = (dp,) + (None,) * (nd - 2) + ("model",)
         else:

@@ -17,7 +17,8 @@ from .flash_attention import (
 )
 from .masked_accum import masked_accum as _maccum, masked_accum_tree as _maccum_tree
 from .rmsnorm import rmsnorm as _rmsnorm
-from .ssd_chunk import ssd_chunk as _ssd_chunk
+from .ssd_chunk import ssd_chunk as _ssd_chunk, ssd_segment as _ssd_segment
+from . import ref as _ref
 
 
 def _default_interpret() -> bool:
@@ -84,3 +85,19 @@ def ssd_chunk(x, dt, cum, b, c, interpret=None):
     if interpret is None:
         interpret = _default_interpret()
     return _ssd_chunk(x, dt, cum, b, c, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_segment(x, dt, cum, b, c, seg, interpret=None):
+    """Segment-masked SSD term: Pallas kernel on TPU, jnp oracle elsewhere.
+
+    Same dispatch story as ``paged_flash_attention``: interpret-mode Pallas
+    walks the grid serially in Python, so off-TPU the vectorized jnp
+    reference is the fast path.  Pass ``interpret=True`` to force the
+    interpreted kernel (what the kernel tests sweep).
+    """
+    if interpret is None:
+        if _default_interpret():
+            return _ref.ssd_segment_ref(x, dt, cum, b, c, seg)
+        interpret = False
+    return _ssd_segment(x, dt, cum, b, c, seg, interpret=interpret)

@@ -118,6 +118,37 @@ def ssd_chunk_ref(
     return jnp.einsum("bgijh,bgjhp->bgihp", att, x.astype(jnp.float32)).astype(x.dtype)
 
 
+def ssd_segment_ref(
+    x: jnp.ndarray,  # (T, H, P) packed tokens
+    dt: jnp.ndarray,  # (T, H)
+    cum: jnp.ndarray,  # (T, H) cumulative log-decay over the packed axis
+    b: jnp.ndarray,  # (T, N)
+    c: jnp.ndarray,  # (T, N)
+    seg: jnp.ndarray,  # (T,) int32 segment (slot) ids; < 0 = padding
+) -> jnp.ndarray:
+    """Segment-masked SSD term for token-packed layouts.
+
+    y[i] = sum_{j<=i, seg_j==seg_i, seg_i>=0} (C_i.B_j) exp(cum_i-cum_j) dt_j x_j
+
+    ``cum`` is one cumulative sum over the whole packed axis: because each
+    segment's tokens are contiguous (a ``pack_step`` invariant) and the
+    caller zeroes dt on padding, cum_i - cum_j for a same-segment pair is
+    exactly the intra-segment decay — no per-segment reset needed.
+    Padding tokens (seg < 0) output zeros.
+    """
+    t = x.shape[0]
+    diff = cum[:, None, :] - cum[None, :, :]  # (T, T, H)
+    li = jnp.tril(jnp.ones((t, t), bool))
+    li = li & (seg[:, None] == seg[None, :]) & (seg >= 0)[:, None]
+    li = li[:, :, None]
+    decay = jnp.exp(-jnp.where(li, diff, 0.0)) * li
+    scores = jnp.einsum(
+        "in,jn->ij", c.astype(jnp.float32), b.astype(jnp.float32)
+    )
+    att = scores[..., None] * decay * dt[None, :, :]
+    return jnp.einsum("ijh,jhp->ihp", att, x.astype(jnp.float32)).astype(x.dtype)
+
+
 def masked_accum_ref(
     acc: jnp.ndarray, grad: jnp.ndarray, keep: jnp.ndarray, scale: float = 1.0
 ) -> jnp.ndarray:

@@ -42,6 +42,65 @@ def _ssd_chunk_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, o_ref):
     o_ref[...] = jnp.dot(att, x).astype(o_ref.dtype)
 
 
+def _ssd_segment_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, seg_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # (T, P)
+    dt = dt_ref[...].astype(jnp.float32)  # (T,)
+    cum = cum_ref[...].astype(jnp.float32)  # (T,)
+    b = b_ref[...].astype(jnp.float32)  # (T, N)
+    c = c_ref[...].astype(jnp.float32)  # (T, N)
+    seg = seg_ref[...]  # (T,) int32
+
+    t = x.shape[0]
+    scores = jnp.dot(c, b.T)  # (T, T)
+    diff = cum[:, None] - cum[None, :]
+    li = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (t, t), 1
+    )
+    li = li & (seg[:, None] == seg[None, :]) & (seg >= 0)[:, None]
+    decay = jnp.exp(-jnp.where(li, diff, 0.0)) * li
+    att = scores * decay * dt[None, :]
+    o_ref[...] = jnp.dot(att, x).astype(o_ref.dtype)
+
+
+def ssd_segment(
+    x: jnp.ndarray,  # (T, H, P) packed tokens
+    dt: jnp.ndarray,  # (T, H)
+    cum: jnp.ndarray,  # (T, H) cumulative log-decay over the packed axis
+    b: jnp.ndarray,  # (T, N)
+    c: jnp.ndarray,  # (T, N)
+    seg: jnp.ndarray,  # (T,) int32 segment (slot) ids; < 0 = padding
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Segment-masked SSD term for token-packed layouts, (T, H, P).
+
+    The packed analogue of the intra-chunk term: one (T, T) decay-weighted
+    score matmul per head, with the causal mask intersected with a
+    same-segment mask so flattened requests stay isolated (the same move
+    ``flash_attention`` makes with q/kv_segment_ids).  Oracle:
+    ``ref.ssd_segment_ref``.
+    """
+    t, h, p = x.shape
+    n = b.shape[-1]
+    br = jnp.broadcast_to(b[:, None, :], (t, h, n))
+    cr = jnp.broadcast_to(c[:, None, :], (t, h, n))
+
+    return pl.pallas_call(
+        _ssd_segment_kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((t, None, p), lambda j: (0, j, 0)),
+            pl.BlockSpec((t, None), lambda j: (0, j)),
+            pl.BlockSpec((t, None), lambda j: (0, j)),
+            pl.BlockSpec((t, None, n), lambda j: (0, j, 0)),
+            pl.BlockSpec((t, None, n), lambda j: (0, j, 0)),
+            pl.BlockSpec((t,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t, None, p), lambda j: (0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h, p), x.dtype),
+        interpret=interpret,
+    )(x, dt, cum, br, cr, seg)
+
+
 def ssd_chunk(
     x: jnp.ndarray,  # (B, NC, L, H, P)
     dt: jnp.ndarray,  # (B, NC, L, H)

@@ -157,11 +157,26 @@ class ModelConfig:
         return mix + ff + norms
 
     def validate(self) -> "ModelConfig":
-        assert self.n_heads % max(self.n_kv_heads, 1) == 0, "GQA group mismatch"
+        # raised, never assert-ed: under python -O a bad config would
+        # sail through here and fail as a shape error (or worse, a
+        # silently-wrong reshape) deep inside a jitted trace
+        if self.n_heads % max(self.n_kv_heads, 1) != 0:
+            raise ValueError(
+                f"GQA group mismatch: n_heads={self.n_heads} is not a "
+                f"multiple of n_kv_heads={self.n_kv_heads}"
+            )
         if "M" in self.pattern:
-            assert (self.ssm_expand * self.d_model) % self.ssm_head_dim == 0
-        if self.n_experts:
-            assert 0 < self.top_k <= self.n_experts
+            di = self.ssm_expand * self.d_model
+            if di % self.ssm_head_dim != 0:
+                raise ValueError(
+                    f"SSD inner dim {di} (ssm_expand * d_model) is not a "
+                    f"multiple of ssm_head_dim={self.ssm_head_dim}"
+                )
+        if self.n_experts and not 0 < self.top_k <= self.n_experts:
+            raise ValueError(
+                f"top_k={self.top_k} must be in [1, n_experts="
+                f"{self.n_experts}]"
+            )
         return self
 
 

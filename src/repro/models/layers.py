@@ -257,7 +257,12 @@ def sdpa_local_banded(
     g = h // kvh
     block = block or min(window, sq)
     n_blocks = sq // block
-    assert n_blocks * block == sq, (sq, block)
+    if n_blocks * block != sq:
+        # raised, not assert-ed (python -O): a ragged final block would
+        # otherwise be silently truncated by the reshape below
+        raise ValueError(
+            f"banded SWA needs seq len {sq} divisible by block {block}"
+        )
     band = window + block  # keys visible to one query block
 
     qg = q.reshape(b, n_blocks, block, kvh, g, d).astype(jnp.float32) / math.sqrt(d)
@@ -605,16 +610,23 @@ def apply_attention(
             buf_len = cache["k"].shape[1]
         b, c = x.shape[:2]
         pos = jnp.asarray(decode_pos)
-        assert pos.ndim == 1, "chunked prefill needs per-slot positions"
+        if pos.ndim != 1:
+            # typed, not assert-ed (python -O): a (B, 1) positions array
+            # would broadcast into wrong scatter addresses silently
+            raise ValueError(
+                f"chunked prefill needs per-slot positions of shape (B,), "
+                f"got ndim={pos.ndim}"
+            )
         # A ring buffer (buf_len == window < seq_len) would silently drop
         # writes past the window here; require the linear layout.  (When
         # seq_len <= window the "ring" never wraps and buf_len != window;
         # the paged pool is linear by construction.)
-        assert window == 0 or buf_len > window, (
-            f"chunked prefill needs a linear cache "
-            f"(init_decode_cache(..., linear=True)); got ring buffer of "
-            f"{buf_len} rows for sliding window {window}"
-        )
+        if window != 0 and buf_len <= window:
+            raise ValueError(
+                f"chunked prefill needs a linear cache "
+                f"(init_decode_cache(..., linear=True)); got ring buffer of "
+                f"{buf_len} rows for sliding window {window}"
+            )
         offs = jnp.arange(c)
         qpos = pos[:, None] + offs[None, :]  # (B, C) absolute positions
         lens = jnp.full((b,), c, jnp.int32) if seq_lens is None else seq_lens

@@ -77,7 +77,7 @@ def encode(params: PyTree, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray
     positions = jnp.arange(x.shape[1])
 
     def run(blk_, x_):
-        y, _, _ = apply_block(blk_, x_, cfg, "B", positions)
+        y, _, _, _ = apply_block(blk_, x_, cfg, "B", positions)
         return y
 
     for blk in enc["blocks"]:
@@ -120,7 +120,7 @@ def forward_features(
         aux = jnp.zeros((), jnp.float32)
 
         def run(blk_, x_, enc_):
-            y, _, a_ = apply_block(
+            y, _, a_, _ = apply_block(
                 blk_, x_, cfg, "G", positions, enc_kv=_cross_kv(blk_, enc_, cfg)
             )
             return y, a_
@@ -132,7 +132,7 @@ def forward_features(
                 x, a = run(blk, x, enc_out)
             aux = aux + a
     else:
-        x, _, aux = apply_stack(params["stack"], x, cfg, positions, moe_impl=moe_impl)
+        x, _, aux, _ = apply_stack(params["stack"], x, cfg, positions, moe_impl=moe_impl)
 
     x = L.apply_norm(params["final_norm"], x, cfg)
     if cfg.prefix_len > 0:
@@ -238,12 +238,13 @@ class UnsupportedPatternError(NotImplementedError):
 
 def require_chunkable(cfg: ModelConfig, what: str = "chunked prefill") -> None:
     """Raise ``UnsupportedPatternError`` unless ``cfg`` supports multi-token
-    cache writes (attention-only patterns, decoder-only)."""
-    if not set(cfg.pattern) <= {"G", "L"}:
+    serving steps (decoder-only; any mix of 'G'/'L'/'R'/'M' layers —
+    recurrent state is advanced by the chunk/segment scan, attention KV by
+    multi-row cache writes).  Enc-dec models stay decode_step-only."""
+    if not set(cfg.pattern) <= {"G", "L", "R", "M"}:
         raise UnsupportedPatternError(
-            f"{what} supports attention-only patterns ('G'/'L'), got "
-            f"{cfg.pattern!r}; recurrent/SSM layers ('R'/'M') advance "
-            f"their state token-by-token — use decode_step"
+            f"{what} supports 'G'/'L'/'R'/'M' layer patterns, got "
+            f"{cfg.pattern!r}"
         )
     if cfg.is_encdec:
         raise UnsupportedPatternError(f"{what} does not support enc-dec models")
@@ -291,7 +292,8 @@ def init_decode_cache(
     if cfg.is_encdec:
         # the enc-dec decoder stack is tail-only (see init_params): its
         # cache must mirror that structure, not the grouped-scan layout
-        assert enc_out is not None, "enc-dec decode needs encoder output"
+        if enc_out is None:  # typed, not assert: must survive python -O
+            raise ValueError("enc-dec decode needs encoder output (enc_out)")
         cache: Dict[str, PyTree] = {
             "stack": {
                 "groups": (),
@@ -316,6 +318,7 @@ def prefill_chunk(
     pos: jnp.ndarray,  # (B,) first absolute position per slot
     seq_lens: jnp.ndarray,  # (B,) active token count per slot (0 = idle)
     moe_impl: str = "dense",
+    return_aux: bool = False,
 ) -> Tuple[jnp.ndarray, PyTree]:
     """Process up to C prompt tokens per slot in one step (chunked prefill).
 
@@ -329,8 +332,15 @@ def prefill_chunk(
     the whole mixed decode+prefill engine iteration.
 
     The cache must be allocated with ``init_decode_cache(..., linear=True)``
-    (no ring buffers).  Only attention patterns support chunking: recurrent
-    layers ('R'/'M') advance their state token-by-token.
+    (no ring buffers).  Recurrent layers ('R'/'M') run a chunk scan seeded
+    from (and writing back to) their per-slot carried state — columns past
+    a row's ``seq_lens`` are an exact state identity, so idle slots keep
+    their state bit-for-bit.
+
+    ``return_aux=True`` (static) additionally returns a per-step stats
+    dict — currently ``{"expert_overflow"}``, the count of MoE routes
+    dropped past expert capacity this step (0 unless
+    ``moe_impl="capacity"``).
 
     Host-side driver loops must synchronize each step (e.g.
     ``jax.block_until_ready`` or materializing the sampled token) before
@@ -348,14 +358,17 @@ def prefill_chunk(
     c = tokens.shape[1]
     positions = pos[:, None] + jnp.arange(c)[None, :]  # (B, C) for RoPE
     x = L.embed(params["embed"], tokens, cfg, positions)
-    x, new_stack, _ = apply_stack(
+    x, new_stack, _, ovf = apply_stack(
         params["stack"], x, cfg, positions, data["stack"],
         decode_pos=pos, seq_lens=jnp.asarray(seq_lens), moe_impl=moe_impl,
         page_tables=tables, page_size=page_size,
     )
     x = L.apply_norm(params["final_norm"], x, cfg)
     logits = L.unembed(params["embed"], x, cfg)
-    return logits, _cache_rebuild(cache, {"stack": new_stack})
+    out_cache = _cache_rebuild(cache, {"stack": new_stack})
+    if return_aux:
+        return logits, out_cache, {"expert_overflow": ovf}
+    return logits, out_cache
 
 
 def verify_step(
@@ -405,6 +418,7 @@ def packed_prefill(
     slot_ids: jnp.ndarray,  # (P,) int32 cache slot per token (< 0 = padding)
     positions: jnp.ndarray,  # (P,) int32 absolute cache position per token
     moe_impl: str = "dense",
+    return_aux: bool = False,
 ) -> Tuple[jnp.ndarray, PyTree]:
     """Token-packed engine step: granted tokens alone determine compute.
 
@@ -418,23 +432,32 @@ def packed_prefill(
     ``apply_attention``), so requests packed side by side can never leak
     into each other.  Returns logits (P, V); the caller reads each slot's
     final granted row.  Same cache contract as ``prefill_chunk``:
-    ``init_decode_cache(..., linear=True)``, attention-only patterns —
-    or a paged ``repro.serve.kv.KVState``, whose block tables route every
-    ``(slot, position)`` to its physical page row.
+    ``init_decode_cache(..., linear=True)`` — or a paged
+    ``repro.serve.kv.KVState``, whose block tables route every
+    ``(slot, position)`` to its physical page row.  Recurrent layers
+    ('R'/'M') run a segment-masked scan over the packed axis: each
+    segment injects its slot's carried state at its first token and the
+    last token writes the state back (``models/recurrent.py``); the
+    pack_step invariant that a slot's tokens are contiguous is what makes
+    one global scan per step sound.  ``return_aux`` as in
+    ``prefill_chunk``.
     """
     require_chunkable(cfg, "packed prefill")
     data, tables, page_size = _cache_parts(cache)
     tokens = jnp.asarray(tokens)[None]  # (1, P)
     pos2 = jnp.asarray(positions)[None]  # (1, P)
     x = L.embed(params["embed"], tokens, cfg, pos2)
-    x, new_stack, _ = apply_stack(
+    x, new_stack, _, ovf = apply_stack(
         params["stack"], x, cfg, pos2, data["stack"],
         slot_ids=jnp.asarray(slot_ids), moe_impl=moe_impl,
         page_tables=tables, page_size=page_size,
     )
     x = L.apply_norm(params["final_norm"], x, cfg)
     logits = L.unembed(params["embed"], x, cfg)
-    return logits[0], _cache_rebuild(cache, {"stack": new_stack})
+    out_cache = _cache_rebuild(cache, {"stack": new_stack})
+    if return_aux:
+        return logits[0], out_cache, {"expert_overflow": ovf}
+    return logits[0], out_cache
 
 
 def decode_step(
@@ -457,7 +480,7 @@ def decode_step(
         for blk, c, kv in zip(
             params["stack"]["tail"], data["stack"]["tail"], data["cross_kv"]
         ):
-            x, nc, _ = apply_block(
+            x, nc, _, _ = apply_block(
                 blk, x, cfg, "G", positions, c, decode_pos=pos, enc_kv=kv
             )
             new_tail.append(nc)
@@ -466,7 +489,7 @@ def decode_step(
             "cross_kv": data["cross_kv"],
         }
     else:
-        x, new_stack, _ = apply_stack(
+        x, new_stack, _, _ = apply_stack(
             params["stack"], x, cfg, positions, data["stack"],
             decode_pos=pos, moe_impl=moe_impl,
             page_tables=tables, page_size=page_size,

@@ -138,6 +138,89 @@ def _moe_sort_once(p, x, cfg: ModelConfig, psum_axis=None) -> Tuple[jnp.ndarray,
     return y2d, aux
 
 
+def apply_moe_capacity(
+    p, x: jnp.ndarray, cfg: ModelConfig, valid: jnp.ndarray = None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Serving-step capacity dispatch: (y, aux_loss, expert_overflow).
+
+    The engine's MoE path.  Same sort-by-expert permutation as ``sort``,
+    with the serving contract made explicit:
+
+    * ``capacity = ceil(cf * tokens * top_k / n_experts)`` (static Python
+      ceil, clamped to [1, tokens]; ``cf = inf`` means no drops — the
+      dense-oracle parity point);
+    * ``valid`` masks padding/idle tokens (dense chunked steps pass
+      ``seq_lens``-derived masks, packed steps ``slot_ids >= 0``): invalid
+      tokens are routed to a phantom expert bucket so they consume **no
+      capacity** — a step's drops can't depend on how much padding the
+      compiled shape carries;
+    * ``expert_overflow`` counts real routed (token, choice) pairs dropped
+      past capacity — per-expert DropCompute tau accounting, mirrored into
+      ``StepStats.expert_overflow`` by the engine.
+
+    Dropped choices fall through the residual path (the block adds y to
+    x, so a fully-dropped token passes through unchanged), the standard
+    capacity behaviour [GShard; Switch].
+
+    At ``cf = inf`` the output is **byte-identical** to
+    ``apply_moe_dense`` (the engine's parity criterion): the dense
+    combine's zero-weight expert terms are exact FMA no-ops, so its
+    accumulation reduces to the routed terms in expert-ascending order —
+    reproduced here by sorting each token's k choices by expert index and
+    combining with the same einsum contraction.
+    """
+    import math
+
+    cd = cfg.compute_dtype
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.n_experts
+    cf = cfg.capacity_factor
+    cap = t if math.isinf(cf) else min(max(math.ceil(t * k / e * cf), 1), t)
+
+    x2d = x.reshape(t, d)
+    top_p, top_i, aux = _router(p, x2d, cfg)
+    valid_t = jnp.ones((t,), bool) if valid is None else valid.reshape(t)
+
+    # invalid tokens route to phantom bucket e: they take no capacity
+    flat_e = jnp.where(jnp.repeat(valid_t, k), top_i.reshape(-1), e)
+    flat_p = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e)  # stable: within-expert keeps token order
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+
+    counts = jnp.zeros((e + 1,), jnp.int32).at[se].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[se]
+    routed = se < e
+    keep = routed & (pos < cap)
+    overflow = jnp.sum(routed & ~keep)
+
+    slot = jnp.where(keep, se * cap + pos, e * cap)
+    buf = jnp.zeros((e * cap + 1, d), cd)
+    buf = buf.at[slot].set(x2d[st].astype(cd), mode="drop")
+    ye = _expert_ffn(p, buf[: e * cap].reshape(e, cap, d), cfg)
+
+    # combine per token over its k choices, sorted ascending by expert —
+    # the order (and einsum form) that bit-matches the dense oracle
+    inv = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        jnp.arange(t * k, dtype=jnp.int32)
+    )
+    slot_tk = slot[inv].reshape(t, k)
+    keep_tk = keep[inv].reshape(t, k)
+    out_tk = ye.reshape(e * cap, d)[jnp.minimum(slot_tk, e * cap - 1)]
+    out_tk = out_tk * keep_tk[..., None].astype(cd)
+    w_tk = jnp.where(keep_tk, top_p, 0.0).astype(cd)
+    ksort = jnp.argsort(top_i, axis=1)
+    y2d = jnp.einsum(
+        "tk,tkd->td",
+        jnp.take_along_axis(w_tk, ksort, axis=1),
+        jnp.take_along_axis(out_tk, ksort[..., None], axis=1),
+    )
+    return y2d.reshape(b, s, d), aux, overflow
+
+
 def apply_moe_dense(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Oracle: run all experts on all tokens, combine with router probs."""
     b, s, d = x.shape

@@ -1,0 +1,147 @@
+"""Shared helpers for serving recurrent layers ('R'/'M') statefully.
+
+Both recurrent blocks (``ssm.py``, ``rglru.py``) carry two kinds of
+per-slot state through the engine: a causal-conv window (the last K-1
+inputs) and the recurrence state itself.  This module holds the layout
+machinery they share:
+
+* dense chunked prefill — a ``(B, C)`` step where row ``i`` consumes
+  ``seq_lens[i]`` tokens (0 for idle slots): the conv state window per
+  row ends at its own length, not at C;
+* token-packed steps — a ``(P,)`` vector of tokens with per-token slot
+  ids (``serve.packing.PAD_SLOT`` on padding), segments contiguous: each
+  token needs its segment-relative offset to know which conv taps come
+  from the packed vector and which from the slot's carried window, and
+  segment-start/segment-last flags gate carried-state injection and
+  write-back.
+
+JAX indexing caveat that shapes every scatter here: negative indices
+WRAP (``a[-1]`` is the last row), so padding slot ids are remapped to an
+out-of-range index (``num_slots``) and dropped with ``mode="drop"`` —
+never scattered through raw.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SegmentInfo(NamedTuple):
+    """Per-token segment geometry of one packed step (all shapes (P,))."""
+
+    valid: jnp.ndarray  # bool: not padding
+    start: jnp.ndarray  # bool: first token of its segment
+    last: jnp.ndarray  # bool: last token of its segment
+    start_idx: jnp.ndarray  # packed index of the segment's first token
+    offset: jnp.ndarray  # segment-relative position (0 at segment start)
+    safe_slot: jnp.ndarray  # slot id with padding clamped to 0 (gather-safe)
+    write_slot: jnp.ndarray  # slot id with padding -> num_slots (scatter-drop)
+    last_slot: jnp.ndarray  # slot id at seg-last tokens, else num_slots
+
+
+def segment_info(slot_ids: jnp.ndarray, num_slots: int) -> SegmentInfo:
+    """Derive segment flags/indices from a packed step's slot ids."""
+    p = slot_ids.shape[0]
+    idx = jnp.arange(p, dtype=jnp.int32)
+    valid = slot_ids >= 0
+    prev = jnp.concatenate([jnp.full((1,), -2, slot_ids.dtype), slot_ids[:-1]])
+    nxt = jnp.concatenate([slot_ids[1:], jnp.full((1,), -2, slot_ids.dtype)])
+    start = valid & (slot_ids != prev)
+    last = valid & (slot_ids != nxt)
+    start_idx = jax.lax.cummax(jnp.where(start, idx, -1))
+    offset = idx - start_idx
+    safe_slot = jnp.where(valid, slot_ids, 0)
+    write_slot = jnp.where(valid, slot_ids, num_slots)
+    last_slot = jnp.where(last, slot_ids, num_slots)
+    return SegmentInfo(valid, start, last, start_idx, offset,
+                       safe_slot, write_slot, last_slot)
+
+
+def packed_conv(
+    x: jnp.ndarray,  # (P, C) packed conv inputs
+    w: jnp.ndarray,  # (K, C) depthwise taps
+    b: jnp.ndarray,  # (C,) bias
+    state: jnp.ndarray,  # (num_slots, K-1, C) carried windows
+    info: SegmentInfo,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over a packed step with per-slot history.
+
+    Tap ``i`` of token ``j`` reads segment-relative position
+    ``offset_j - (K-1) + i``: non-negative positions come from the packed
+    vector itself (same segment — segments are contiguous), negative ones
+    from the slot's carried window.  Returns the pre-activation output
+    (P, C) and the updated per-slot windows: each segment's last token
+    scatters its trailing K-1 inputs; slots absent from this step keep
+    their window untouched.
+    """
+    k = w.shape[0]
+    p = x.shape[0]
+    idx = jnp.arange(p, dtype=jnp.int32)
+    win = state.astype(x.dtype)[info.safe_slot]  # (P, K-1, C)
+
+    def tap(virt, src_tok):
+        # virt: (P,) segment-relative position of the tap; < 0 => history
+        tok_val = x[jnp.clip(src_tok, 0, p - 1)]
+        st_idx = jnp.clip(virt + (k - 1), 0, k - 2)
+        st_val = jnp.take_along_axis(win, st_idx[:, None, None], axis=1)[:, 0]
+        return jnp.where((virt >= 0)[:, None], tok_val, st_val)
+
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + w[i] * tap(info.offset - (k - 1) + i, idx - (k - 1) + i)
+    out = out + b
+
+    # the window ending at each token: its last K-1 inputs inclusive
+    rows = [tap(info.offset - (k - 2) + m, idx - (k - 2) + m)
+            for m in range(k - 1)]
+    window = jnp.stack(rows, axis=1)  # (P, K-1, C)
+    new_state = state.at[info.last_slot].set(
+        window.astype(state.dtype), mode="drop"
+    )
+    return out, new_state
+
+
+def chunked_conv_state(
+    xp: jnp.ndarray,  # (B, K-1+C, C_feat): carried window ++ this chunk
+    seq_lens: jnp.ndarray,  # (B,) tokens consumed per row this step
+    k: int,
+) -> jnp.ndarray:
+    """Per-row conv windows after a dense chunked step, (B, K-1, C_feat).
+
+    Row ``i``'s new window is the K-1 inputs ending at its own length —
+    ``xp[i, L_i : L_i + K-1]`` — so an idle row (L_i = 0) keeps exactly
+    its old window.
+    """
+    idx = seq_lens[:, None].astype(jnp.int32) + jnp.arange(k - 1, dtype=jnp.int32)
+    return jnp.take_along_axis(xp, idx[:, :, None], axis=1)
+
+
+def final_segment_decay(
+    cum: jnp.ndarray,  # (P, H) cumulative log-decay over the packed axis
+    da: jnp.ndarray,  # (P, H) per-token log-decay
+    info: SegmentInfo,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decay bookkeeping for carried-state injection and write-back.
+
+    Returns ``(ent, w_end)``, both (P, H):
+
+    * ``ent[j]`` — log-decay from *before* the segment start through token
+      ``j`` inclusive: ``cum_j - cum[start] + da[start]``.  The carried
+      state's contribution at token j is ``exp(-ent_j)``; at the seg-last
+      token it is the carried state's total decay over the segment.
+    * ``w_end[j]`` — decay from token j (exclusive) to its segment's last
+      token: ``exp(-(cum[end] - cum_j))`` — the weight of token j's state
+      update in the segment-final state.
+    """
+    p = cum.shape[0]
+    cum_start = cum[jnp.clip(info.start_idx, 0, p - 1)]
+    da_start = da[jnp.clip(info.start_idx, 0, p - 1)]
+    ent = cum - cum_start + da_start
+    end_idx = jax.lax.cummin(
+        jnp.where(info.last, jnp.arange(p, dtype=jnp.int32), p), reverse=True
+    )
+    cum_end = cum[jnp.clip(end_idx, 0, p - 1)]
+    w_end = jnp.exp(-(cum_end - cum))
+    return ent, w_end

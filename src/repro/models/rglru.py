@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from .config import ModelConfig
 from .layers import dense_init
+from .recurrent import chunked_conv_state, packed_conv, segment_info
 
 _C = 8.0
 
@@ -60,19 +61,37 @@ def _conv(x, w, b, state=None):
     return out + b, new_state
 
 
-def _rglru_scan(x, r, i, a_param):
-    """Linear recurrence via associative scan. x/r/i: (B, S, Dr) fp32."""
+def _decay_and_update(x, r, i, a_param):
+    """Per-step decay a_t and gated input sqrt(1-a_t^2)*(i*x), both fp32."""
     log_a = -_C * r * jax.nn.softplus(-a_param)  # log(a^(c r)), a=sigmoid(lam)
     a_t = jnp.exp(log_a)
     gated = jnp.sqrt(jnp.maximum(1.0 - a_t**2, 1e-12)) * (i * x)
+    return a_t, gated
 
-    def combine(c1, c2):
-        a1, b1 = c1
-        a2, b2 = c2
-        return a1 * a2, a2 * b1 + b2
 
-    a_all, h = jax.lax.associative_scan(combine, (a_t, gated), axis=1)
-    return h
+def _combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+def _rglru_scan(x, r, i, a_param):
+    """Linear recurrence via associative scan. x/r/i: (B, S, Dr) fp32.
+
+    Returns ``(a_all, h)``: the running decay product and the recurrence
+    output, both (B, S, Dr).  ``a_all`` is the factor a carried initial
+    state picks up at each position — ``h_full = h + a_all * h0`` — which
+    the stateful chunked-prefill path uses.
+    """
+    a_t, gated = _decay_and_update(x, r, i, a_param)
+    a_all, h = jax.lax.associative_scan(_combine, (a_t, gated), axis=1)
+    return a_all, h
+
+
+def _gates(p, uf):
+    r = jax.nn.sigmoid(uf * p["gate_a_w"].astype(jnp.float32) + p["gate_a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf * p["gate_x_w"].astype(jnp.float32) + p["gate_x_b"].astype(jnp.float32))
+    return r, i
 
 
 def apply_rglru(
@@ -80,7 +99,20 @@ def apply_rglru(
     x: jnp.ndarray,
     cfg: ModelConfig,
     cache: Optional[Dict[str, jnp.ndarray]] = None,
+    seq_lens: Optional[jnp.ndarray] = None,
+    slot_ids: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """One RG-LRU block. x: (B, S, D).
+
+    Cache selects the serving path (mirroring ``apply_ssd``): with
+    ``seq_lens`` a dense chunked-prefill step — columns past a row's
+    length get a_t=1, gated=0, an exact identity, so the final column's
+    state IS the state after the row's last real token; with
+    ``slot_ids`` a token-packed step — the carried h is injected at each
+    segment's first token (whose a_t is re-routed into the injection and
+    zeroed in the scan, cutting cross-segment flow) and written back from
+    its last; with neither, single-token decode.
+    """
     cd = cfg.compute_dtype
     u = jnp.einsum("bsd,de->bse", x, p["w_branch"].astype(cd))
     g = jnp.einsum("bsd,de->bse", x, p["w_gate_branch"].astype(cd))
@@ -88,10 +120,45 @@ def apply_rglru(
     if cache is None:
         u, _ = _conv(u, p["conv_w"].astype(cd), p["conv_b"].astype(cd))
         uf = u.astype(jnp.float32)
-        r = jax.nn.sigmoid(uf * p["gate_a_w"].astype(jnp.float32) + p["gate_a_b"].astype(jnp.float32))
-        i = jax.nn.sigmoid(uf * p["gate_x_w"].astype(jnp.float32) + p["gate_x_b"].astype(jnp.float32))
-        h = _rglru_scan(uf, r, i, p["lam"].astype(jnp.float32))
+        r, i = _gates(p, uf)
+        _, h = _rglru_scan(uf, r, i, p["lam"].astype(jnp.float32))
         new_cache = None
+    elif seq_lens is not None:
+        bs, s = u.shape[:2]
+        k = cfg.rglru_conv
+        u_c, _ = _conv(u, p["conv_w"].astype(cd), p["conv_b"].astype(cd), cache["conv"])
+        xp = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)
+        conv_state = chunked_conv_state(xp, seq_lens, k).astype(cache["conv"].dtype)
+        uf = u_c.astype(jnp.float32)
+        r, i = _gates(p, uf)
+        a_t, gated = _decay_and_update(uf, r, i, p["lam"].astype(jnp.float32))
+        valid = (jnp.arange(s)[None, :] < seq_lens[:, None])[..., None]
+        a_t = jnp.where(valid, a_t, 1.0)  # identity past each row's length
+        gated = jnp.where(valid, gated, 0.0)
+        a_all, h = jax.lax.associative_scan(_combine, (a_t, gated), axis=1)
+        h = h + a_all * cache["h"][:, None]
+        new_cache = {"conv": conv_state, "h": h[:, -1]}
+    elif slot_ids is not None:
+        num_slots = cache["h"].shape[0]
+        info = segment_info(slot_ids, num_slots)
+        u_c, conv_state = packed_conv(
+            u[0], p["conv_w"].astype(cd), p["conv_b"].astype(cd),
+            cache["conv"], info,
+        )
+        uf = u_c.astype(jnp.float32)  # (P, Dr)
+        r, i = _gates(p, uf)
+        a_t, gated = _decay_and_update(uf, r, i, p["lam"].astype(jnp.float32))
+        live = info.valid[:, None]
+        h0 = cache["h"][info.safe_slot]  # (P, Dr)
+        a_eff = jnp.where(info.start[:, None] | ~live, 0.0, a_t)
+        b_eff = jnp.where(info.start[:, None], a_t * h0 + gated,
+                          jnp.where(live, gated, 0.0))
+        _, h = jax.lax.associative_scan(_combine, (a_eff, b_eff), axis=0)
+        new_cache = {
+            "conv": conv_state,
+            "h": cache["h"].at[info.last_slot].set(h, mode="drop"),
+        }
+        h = h[None]
     else:
         u, conv_state = _conv(u, p["conv_w"].astype(cd), p["conv_b"].astype(cd), cache["conv"])
         uf = u.astype(jnp.float32)

@@ -20,6 +20,12 @@ import jax.numpy as jnp
 
 from .config import ModelConfig
 from .layers import dense_init
+from .recurrent import (
+    chunked_conv_state,
+    final_segment_decay,
+    packed_conv,
+    segment_info,
+)
 
 
 def init_ssd(rng, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
@@ -65,12 +71,17 @@ def _causal_conv(xbc, w, b, state: Optional[jnp.ndarray] = None):
     return out, new_state
 
 
-def _ssd_chunked(x, dt, a, b, c, chunk: int):
+def _ssd_chunked(x, dt, a, b, c, chunk: int, init_state=None):
     """Chunked SSD scan.
 
     x: (B, S, H, P)   dt: (B, S, H)   a: (H,) positive decay rates
     b, c: (B, S, N)   (single group, shared across heads — Mamba-2 default)
-    Returns y: (B, S, H, P).
+    ``init_state`` (B, H, N, P) seeds the inter-chunk recurrence (a slot's
+    carried state during chunked prefill); None = zeros (training / fresh
+    sequence).  Returns ``(y, final_state)`` with y (B, S, H, P) and
+    final_state (B, H, N, P) — the recurrence state after the last token
+    (for rows whose tail is dt=0 padding, padding is an exact identity,
+    so this IS the state after each row's own last real token).
     """
     bs, s, h, p = x.shape
     n = b.shape[-1]
@@ -107,8 +118,9 @@ def _ssd_chunked(x, dt, a, b, c, chunk: int):
         new = carry * dec[..., None, None] + st
         return new, carry  # emit state *entering* the chunk
 
-    init = jnp.zeros_like(states[:, 0])
-    _, prev_states = jax.lax.scan(
+    init = (jnp.zeros_like(states[:, 0]) if init_state is None
+            else init_state.astype(states.dtype))
+    final, prev_states = jax.lax.scan(
         scan_body,
         init,
         (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
@@ -121,7 +133,7 @@ def _ssd_chunked(x, dt, a, b, c, chunk: int):
         "bgin,bgih,bghnp->bgihp", cc, in_decay, prev_states
     )
     y = (y_intra + y_inter).reshape(bs, s, h, p)
-    return y
+    return y, final
 
 
 def apply_ssd(
@@ -129,8 +141,18 @@ def apply_ssd(
     x: jnp.ndarray,
     cfg: ModelConfig,
     cache: Optional[Dict[str, jnp.ndarray]] = None,
+    seq_lens: Optional[jnp.ndarray] = None,
+    slot_ids: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
-    """One Mamba-2 block. x: (B, S, D). cache => single-token decode."""
+    """One Mamba-2 block. x: (B, S, D).
+
+    Cache selects the serving path: with ``seq_lens`` it is a dense
+    chunked-prefill step (row i consumes its first seq_lens[i] columns;
+    dt is zeroed past them, which makes padding an exact identity, and
+    the carried state seeds the inter-chunk scan); with ``slot_ids`` a
+    token-packed step (x is (1, P, D), per-token slot gather/scatter of
+    the carried state); with neither, single-token decode.
+    """
     cd = cfg.compute_dtype
     proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(cd))
     z, xbc, dt, di, n, nh = _split_proj(cfg, proj)
@@ -150,7 +172,7 @@ def apply_ssd(
             c_p = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
         else:
             dt_p, b_p, c_p = dt, b, c
-        y = _ssd_chunked(
+        y, _ = _ssd_chunked(
             xh.astype(jnp.float32), dt_p, a,
             b_p.astype(jnp.float32), c_p.astype(jnp.float32), cfg.ssm_chunk,
         )
@@ -158,6 +180,66 @@ def apply_ssd(
             y = y[:, :s]
             xh = xh[:, :s]
         new_cache = None
+    elif seq_lens is not None:
+        bs, s = xbc.shape[:2]
+        k = cfg.ssm_conv
+        valid = jnp.arange(s)[None, :] < seq_lens[:, None]  # (B, S)
+        dt = jnp.where(valid[..., None], dt, 0.0)
+        conv_out, _ = _causal_conv(
+            xbc, p["conv_w"].astype(cd), p["conv_b"].astype(cd), cache["conv"]
+        )
+        xp = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+        conv_state = chunked_conv_state(xp, seq_lens, k).astype(cache["conv"].dtype)
+        xs, b, c = jnp.split(conv_out, [di, di + n], axis=-1)
+        xh = xs.reshape(bs, s, nh, cfg.ssm_head_dim)
+        pad = (-s) % cfg.ssm_chunk
+        if pad:
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh_p, dt_p, b_p, c_p = xh, dt, b, c
+        y, final = _ssd_chunked(
+            xh_p.astype(jnp.float32), dt_p, a,
+            b_p.astype(jnp.float32), c_p.astype(jnp.float32), cfg.ssm_chunk,
+            init_state=cache["state"],
+        )
+        y = y[:, :s]
+        new_cache = {"conv": conv_state, "state": final}
+    elif slot_ids is not None:
+        from ..kernels import ops as kops
+
+        num_slots = cache["state"].shape[0]
+        info = segment_info(slot_ids, num_slots)
+        xbc1 = xbc[0]  # (P, C): packed steps carry batch dim 1
+        dtp = jnp.where(info.valid[:, None], dt[0], 0.0)  # (P, H)
+        conv_out, conv_state = packed_conv(
+            xbc1, p["conv_w"].astype(cd), p["conv_b"].astype(cd),
+            cache["conv"], info,
+        )
+        conv_out = jax.nn.silu(conv_out)
+        xs, b, c = jnp.split(conv_out, [di, di + n], axis=-1)
+        xh1 = xs.reshape(-1, nh, cfg.ssm_head_dim).astype(jnp.float32)
+        bf, cf = b.astype(jnp.float32), c.astype(jnp.float32)
+        da = dtp * a[None, :]
+        cum = jnp.cumsum(da, axis=0)
+        y1 = kops.ssd_segment(xh1, dtp, cum, bf, cf, slot_ids)
+        # carried-state injection + segment-final write-back
+        ent, w_end = final_segment_decay(cum, da, info)
+        init = cache["state"][info.safe_slot]  # (P, H, N, hd)
+        y1 = y1 + jnp.einsum("tn,thnp,th->thp", cf, init, jnp.exp(-ent))
+        upd = jnp.einsum("tn,th,thp->thnp", bf, w_end * dtp, xh1)
+        contrib = jnp.zeros_like(cache["state"]).at[info.write_slot].add(
+            upd, mode="drop"
+        )
+        df = jnp.ones((num_slots, nh), jnp.float32).at[info.last_slot].set(
+            jnp.exp(-ent), mode="drop"
+        )
+        state = cache["state"] * df[..., None, None] + contrib
+        new_cache = {"conv": conv_state, "state": state}
+        y = y1[None]
+        xh = xh1[None]
     else:
         conv_out, conv_state = _causal_conv(
             xbc, p["conv_w"].astype(cd), p["conv_b"].astype(cd), cache["conv"]

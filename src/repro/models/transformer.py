@@ -106,9 +106,10 @@ def apply_block(
     slot_ids=None,
     page_tables=None,
     page_size: int = 0,
-) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
-    """Returns (x, new_cache, aux_loss)."""
+) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray, jnp.ndarray]:
+    """Returns (x, new_cache, aux_loss, expert_overflow)."""
     aux = jnp.zeros((), jnp.float32)
+    overflow = jnp.zeros((), jnp.int32)
     new_cache = cache
     if kind in ("G", "L", "B"):
         h = L.apply_norm(p["norm1"], x, cfg)
@@ -125,7 +126,15 @@ def apply_block(
             x = x + y
         h = L.apply_norm(p["norm2"], x, cfg)
         if cfg.n_experts > 0:
-            y, aux = MoE.apply_moe(p["moe"], h, cfg, impl=moe_impl)
+            if moe_impl == "capacity":
+                valid = None
+                if seq_lens is not None:
+                    valid = jnp.arange(h.shape[1])[None, :] < seq_lens[:, None]
+                elif slot_ids is not None:
+                    valid = (slot_ids >= 0)[None, :]
+                y, aux, overflow = MoE.apply_moe_capacity(p["moe"], h, cfg, valid=valid)
+            else:
+                y, aux = MoE.apply_moe(p["moe"], h, cfg, impl=moe_impl)
         else:
             y = L.apply_mlp(p["mlp"], h, cfg)
         x = x + y
@@ -135,7 +144,9 @@ def apply_block(
     elif kind == "R":
         h = L.apply_norm(p["norm1"], x, cfg)
         rg_cache = None if cache is None else cache.get("rglru")
-        y, rg_cache = RG.apply_rglru(p["rglru"], h, cfg, rg_cache)
+        y, rg_cache = RG.apply_rglru(
+            p["rglru"], h, cfg, rg_cache, seq_lens=seq_lens, slot_ids=slot_ids
+        )
         x = x + y
         h = L.apply_norm(p["norm2"], x, cfg)
         x = x + L.apply_mlp(p["mlp"], h, cfg)
@@ -145,12 +156,14 @@ def apply_block(
     elif kind == "M":
         h = L.apply_norm(p["norm1"], x, cfg)
         ssd_cache = None if cache is None else cache.get("ssd")
-        y, ssd_cache = SSD.apply_ssd(p["ssd"], h, cfg, ssd_cache)
+        y, ssd_cache = SSD.apply_ssd(
+            p["ssd"], h, cfg, ssd_cache, seq_lens=seq_lens, slot_ids=slot_ids
+        )
         x = x + y
         if cache is not None:
             new_cache = dict(cache)
             new_cache["ssd"] = ssd_cache
-    return x, new_cache, aux
+    return x, new_cache, aux, overflow
 
 
 def init_block_cache(
@@ -220,31 +233,37 @@ def apply_stack(
     slot_ids=None,
     page_tables=None,
     page_size: int = 0,
-) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
+) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray, jnp.ndarray]:
     """Apply all layers. enc_kv_fn(block_params, ) is handled by encdec path
     in model.py via per-block cross KV computed there (cross_kv passed as a
     stacked tensor through scan is handled by the caller precomputing KV).
+
+    Returns (x, new_caches, aux_loss, expert_overflow) — overflow is the
+    stack-total count of MoE routes dropped past capacity (always 0 for
+    non-capacity moe_impl).
     """
     unit, n_groups, tail = _unit_and_groups(cfg)
     aux_total = jnp.zeros((), jnp.float32)
+    ovf_total = jnp.zeros((), jnp.int32)
 
     def group_body(carry, xs):
-        x, aux = carry
+        x, aux, ovf = carry
         group_params, group_caches = xs
         if group_caches is None:
             x = constrain_activations(x, cfg)
         new_caches = []
         for j, kind in enumerate(unit):
             cache_j = None if group_caches is None else group_caches[j]
-            x, nc, a = apply_block(
+            x, nc, a, o = apply_block(
                 group_params[j], x, cfg, kind, positions, cache_j,
                 decode_pos=decode_pos, moe_impl=moe_impl, seq_lens=seq_lens,
                 slot_ids=slot_ids, page_tables=page_tables, page_size=page_size,
             )
             new_caches.append(nc)
             aux = aux + a
+            ovf = ovf + o
         out = tuple(new_caches) if group_caches is not None else None
-        return (x, aux), out
+        return (x, aux, ovf), out
 
     body = group_body
     if cfg.remat and caches is None:
@@ -254,13 +273,14 @@ def apply_stack(
         xs = (params["groups"], caches["groups"] if caches is not None else None)
         if caches is None:
             # scan needs a concrete xs pytree: pair params only
-            (x, aux_total), _ = jax.lax.scan(
-                lambda c, gp: body(c, (gp, None)), (x, aux_total), params["groups"]
+            (x, aux_total, ovf_total), _ = jax.lax.scan(
+                lambda c, gp: body(c, (gp, None)), (x, aux_total, ovf_total),
+                params["groups"]
             )
             new_group_caches = None
         else:
-            (x, aux_total), new_group_caches = jax.lax.scan(
-                body, (x, aux_total), xs
+            (x, aux_total, ovf_total), new_group_caches = jax.lax.scan(
+                body, (x, aux_total, ovf_total), xs
             )
     else:
         new_group_caches = caches["groups"] if caches is not None else None
@@ -276,17 +296,18 @@ def apply_stack(
             )
 
         if cfg.remat and caches is None:
-            x, _, a = jax.checkpoint(run, prevent_cse=False)(p, x)
+            x, _, a, o = jax.checkpoint(run, prevent_cse=False)(p, x)
             nc = None
         else:
-            x, nc, a = apply_block(
+            x, nc, a, o = apply_block(
                 p, x, cfg, kind, positions, cache_i, decode_pos=decode_pos,
                 moe_impl=moe_impl, seq_lens=seq_lens, slot_ids=slot_ids,
                 page_tables=page_tables, page_size=page_size,
             )
         new_tail.append(nc)
         aux_total = aux_total + a
+        ovf_total = ovf_total + o
 
     if caches is None:
-        return x, None, aux_total
-    return x, {"groups": new_group_caches, "tail": new_tail}, aux_total
+        return x, None, aux_total, ovf_total
+    return x, {"groups": new_group_caches, "tail": new_tail}, aux_total, ovf_total

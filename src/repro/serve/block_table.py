@@ -68,7 +68,11 @@ class PagedTables:
     """Block tables + ref-counted page pool + prefix cache for one engine."""
 
     def __init__(self, num_slots: int, num_blocks: int, num_pages: int, page_size: int):
-        assert num_slots >= 1 and num_blocks >= 1 and num_pages >= 1 and page_size >= 1
+        if min(num_slots, num_blocks, num_pages, page_size) < 1:
+            raise PageError(  # typed, not assert: must survive python -O
+                f"PagedTables sizes must be >= 1: slots={num_slots}, "
+                f"blocks={num_blocks}, pages={num_pages}, page_size={page_size}"
+            )
         self.num_slots = num_slots
         self.num_blocks = num_blocks
         self.num_pages = num_pages

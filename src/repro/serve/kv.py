@@ -39,8 +39,12 @@ import jax
 import jax.numpy as jnp
 
 from ..models import layers as L
-from ..models.model import init_decode_cache, require_chunkable
-from ..models.transformer import _unit_and_groups
+from ..models.model import (
+    UnsupportedPatternError,
+    init_decode_cache,
+    require_chunkable,
+)
+from ..models.transformer import _unit_and_groups, init_block_cache
 from .block_table import PagedTables
 
 PyTree = Any
@@ -56,7 +60,26 @@ class KVState:
     """Device KV state: the per-layer cache pytree plus, for the paged
     layout, the block-table array.  ``page_size == 0`` means dense slots
     (``tables`` is ``None`` and ``data`` is exactly the legacy cache
-    dict).  Registered as a pytree, so it passes through ``jax.jit``."""
+    dict).  Registered as a pytree, so it passes through ``jax.jit``.
+
+    ``data`` is a *heterogeneous* per-layer-kind pytree — the LayerState
+    protocol.  Each layer carries the state its kind needs:
+
+    * ``'G'``/``'L'`` (attention) — ``{"attn": ...}`` KV rows, dense
+      ``(num_slots, L)`` or a paged ``(num_pages, page_size)`` pool
+      addressed through ``tables``;
+    * ``'R'`` (RG-LRU) — ``{"rglru": {"h", "conv"}}``, fixed-size
+      per-slot recurrent state with leading dim ``num_slots`` in *both*
+      layouts (recurrent state is O(1) per slot — nothing to page);
+    * ``'M'`` (SSD/Mamba-2) — ``{"ssd": {"state", "conv"}}``, same rule.
+
+    The leaf kind decides every lifecycle op: page ops (COW copies, block
+    tables) apply only to attention leaves; admission zeroes a slot's
+    recurrent rows (``reset_recurrent_state``); **fork of recurrent state
+    is an eager row copy, not a page share** — there is no meaningful COW
+    for a value the very next step overwrites in place — and trim/rollback
+    is impossible (the state has already consumed the trimmed tokens), so
+    speculative decoding is refused for 'R'/'M' patterns."""
 
     data: PyTree
     tables: Optional[jnp.ndarray] = None  # (num_slots, num_blocks) int32
@@ -88,29 +111,73 @@ jax.tree_util.register_pytree_with_keys(
 )
 
 
+def _path_has(path, keys) -> bool:
+    return any(
+        isinstance(e, jax.tree_util.DictKey) and e.key in keys for e in path
+    )
+
+
+def _is_recurrent_path(path) -> bool:
+    """Recurrent-state leaves ('R'/'M' layers) are slot-indexed, never
+    page-indexed — every page op must skip them."""
+    return _path_has(path, ("rglru", "ssd"))
+
+
 def copy_pages_state(state: KVState, ops: Sequence[Tuple[int, int]]) -> KVState:
     """Apply ``(src, dst)`` page copies to every pool leaf (the device half
     of copy-on-write).  Group-scanned leaves carry a leading ``n_groups``
     dim ahead of the page axis — decided by tree path (``"groups"``), not
     rank, because int8 pools add per-row scale leaves whose rank collides
-    with the un-grouped k/v pools."""
+    with the un-grouped k/v pools.  Recurrent leaves are slot-indexed, not
+    page-indexed, and pass through untouched."""
     if not ops:
         return state
     src = jnp.asarray([s for s, _ in ops], jnp.int32)
     dst = jnp.asarray([d for _, d in ops], jnp.int32)
 
     def leaf(path, x):
-        grouped = any(
-            isinstance(e, jax.tree_util.DictKey) and e.key == "groups"
-            for e in path
-        )
-        if grouped:  # (n_groups, num_pages, ...)
+        if _is_recurrent_path(path):
+            return x
+        if _path_has(path, ("groups",)):  # (n_groups, num_pages, ...)
             return x.at[:, dst].set(x[:, src])
         return x.at[dst].set(x[src])  # (num_pages, ...)
 
     return dataclasses.replace(
         state, data=jax.tree_util.tree_map_with_path(leaf, state.data)
     )
+
+
+def reset_recurrent_state(data: PyTree, slots) -> PyTree:
+    """Zero the recurrent-state rows of ``slots`` in a cache pytree — the
+    admission-time counterpart of mapping fresh KV pages (a freed slot's
+    stale h/conv/state must not leak into its next tenant).  Attention
+    leaves pass through untouched; no-op pytree-wise for pure-attention
+    patterns.  Accepts the raw ``data`` tree (dict or ``KVState.data``)."""
+    slots = jnp.asarray(slots, jnp.int32)
+
+    def leaf(path, x):
+        if not _is_recurrent_path(path):
+            return x
+        if _path_has(path, ("groups",)):  # (n_groups, num_slots, ...)
+            return x.at[:, slots].set(0)
+        return x.at[slots].set(0)
+
+    return jax.tree_util.tree_map_with_path(leaf, data)
+
+
+def copy_recurrent_state(data: PyTree, src: int, dst: int) -> PyTree:
+    """Copy slot ``src``'s recurrent rows onto ``dst`` — the fork path.
+    Unlike attention KV, forked recurrent state is an eager copy (COW
+    would buy nothing: the next step rewrites the row in place)."""
+
+    def leaf(path, x):
+        if not _is_recurrent_path(path):
+            return x
+        if _path_has(path, ("groups",)):
+            return x.at[:, dst].set(x[:, src])
+        return x.at[dst].set(x[src])
+
+    return jax.tree_util.tree_map_with_path(leaf, data)
 
 
 # ---------------------------------------------------------------------------
@@ -155,7 +222,12 @@ class Paged:
         kv, hd = cfg.n_kv_heads, cfg.hd
         dtype = spec.resolved_kv_dtype(cfg)
 
-        def one_layer():
+        def one_layer(kind):
+            if kind in ("R", "M"):
+                # recurrent state is O(1) per slot: the same fixed-size
+                # slot-indexed rows as the dense layout, living beside
+                # the page pools (never addressed through block tables)
+                return init_block_cache(cfg, kind, spec.num_slots, 1)
             z = jnp.zeros((num_pages, ps, kv, hd), dtype)
             layer = {"attn": {"k": z, "v": z + 0}}
             if spec.kv_dtype == "int8":
@@ -170,11 +242,13 @@ class Paged:
         groups = tuple(
             jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape).copy(),
-                one_layer(),
+                one_layer(kind),
             )
-            for _ in unit
+            for kind in unit
         )
-        tail_cs = [one_layer() for _ in range(tail)]
+        tail_cs = [
+            one_layer(cfg.pattern[n_groups * len(unit) + i]) for i in range(tail)
+        ]
         return {"stack": {"groups": groups, "tail": tail_cs}}
 
 
@@ -215,7 +289,11 @@ class KVCacheSpec:
     def __post_init__(self):
         if self.layout not in _LAYOUTS:
             raise ValueError(f"unknown KV layout {self.layout!r}; want dense|paged")
-        assert self.num_slots >= 1 and self.max_len >= 1 and self.page_size >= 1
+        if self.num_slots < 1 or self.max_len < 1 or self.page_size < 1:
+            raise ValueError(  # typed, not assert: must survive python -O
+                f"KVCacheSpec sizes must be >= 1: num_slots={self.num_slots}, "
+                f"max_len={self.max_len}, page_size={self.page_size}"
+            )
         if self.kv_dtype is not None:
             if self.layout != "paged":
                 raise ValueError("kv_dtype is a paged-layout knob; dense slots "
@@ -325,6 +403,11 @@ class KVCache:
     # -- layout-independent surface ----------------------------------------
 
     @property
+    def has_recurrent(self) -> bool:
+        """True when the pattern carries per-slot recurrent state leaves."""
+        return bool(set(self.cfg.pattern) & {"R", "M"})
+
+    @property
     def page_size(self) -> int:
         return self.spec.page_size if self.tables is not None else 0
 
@@ -367,24 +450,44 @@ class KVCache:
     def admit_slot(self, slot: int, prompt, max_new: int) -> Optional[int]:
         """Reserve pages for a request; returns prompt tokens covered by
         shared prefix pages (skip prefilling them), or None when the pool
-        cannot hold the request.  Dense: always admits, shares nothing."""
+        cannot hold the request.  Dense: always admits, shares nothing.
+        Recurrent-state rows are zeroed for the slot in both layouts (the
+        previous tenant's state must not seed the new request)."""
         if self.tables is None:
+            if self.has_recurrent:
+                self.state = dataclasses.replace(
+                    self.state,
+                    data=reset_recurrent_state(self.state.data, [slot]),
+                )
             return 0
         shared = self.tables.admit(slot, prompt, max_new)
         if shared is not None:
+            if self.has_recurrent:
+                self.state = dataclasses.replace(
+                    self.state,
+                    data=reset_recurrent_state(self.state.data, [slot]),
+                )
             self.sync()
         return shared
 
     def probe_shared(self, prompt) -> int:
         """Prompt tokens the prefix cache could supply right now, without
         mutating anything (the admission-time in-flight dedup probe).
-        Dense: nothing is ever shared."""
-        if self.tables is None:
+        Dense: nothing is ever shared.  Recurrent patterns: never —
+        prefix sharing is attention-only (see ``share``)."""
+        if self.tables is None or self.has_recurrent:
             return 0
         return self.tables.probe_shareable(prompt)
 
     def share(self, slot: int, prompt, pos: int) -> int:
-        if self.tables is None:
+        """Map prefix-cache pages covering ``prompt`` from ``pos`` on.
+        Disabled for recurrent patterns: a shared page lets the engine
+        *skip prefilling* those tokens, which is only sound when the
+        cache is an append-only log — the 'R'/'M' carried state must
+        scan every prompt token, so nothing is shared (or published;
+        see ``register_prompt_pages``) and every prompt prefills in
+        full."""
+        if self.tables is None or self.has_recurrent:
             return 0
         n = self.tables.try_share(slot, prompt, pos)
         if n:
@@ -407,7 +510,11 @@ class KVCache:
         self.prepare_step([(slot, start, [0] * n)])
 
     def register_prompt_pages(self, slot: int, prompt, upto: int) -> None:
-        if self.tables is not None:
+        """Publish fully-written prompt pages into the prefix cache.
+        Recurrent patterns publish nothing — keeping the prefix cache
+        empty is what guarantees ``admit`` never maps shared pages for
+        them (one gate covers admission, lazy sharing, and probing)."""
+        if self.tables is not None and not self.has_recurrent:
             self.tables.register_prompt_pages(slot, prompt, upto)
 
     def trim_slot(self, slot: int, keep_tokens: int) -> int:
@@ -415,7 +522,14 @@ class KVCache:
         past the kept length (speculative-decoding rollback of rejected
         draft KV).  Dense layout: a no-op — stale rows past the position
         cursor are never attended (position-mask trim is free).  Returns
-        blocks dropped."""
+        blocks dropped.  Recurrent patterns refuse: carried state has
+        already consumed the trimmed tokens and cannot roll back."""
+        if self.has_recurrent:
+            raise UnsupportedPatternError(
+                "trim_slot cannot roll back recurrent state ('R'/'M' "
+                "layers): the carried state already consumed the trimmed "
+                "tokens — speculative rollback is attention-only"
+            )
         if self.tables is None:
             return 0
         n = self.tables.trim(slot, keep_tokens)
@@ -430,8 +544,16 @@ class KVCache:
 
     def fork_slot(self, parent: int, child: int) -> None:
         """Share every page of ``parent`` with ``child`` (copy-on-write on
-        the next write).  Dense layout: unsupported."""
+        the next write).  Dense layout: unsupported.  Recurrent leaves are
+        *copied* eagerly, not shared — a recurrent row is overwritten in
+        place by the child's very next step, so page-style COW degenerates
+        to a copy anyway; doing it here keeps the divergence explicit."""
         if self.tables is None:
             raise NotImplementedError("fork_slot requires the paged layout")
         self.tables.fork(parent, child)
+        if self.has_recurrent:
+            self.state = dataclasses.replace(
+                self.state,
+                data=copy_recurrent_state(self.state.data, parent, child),
+            )
         self.sync()

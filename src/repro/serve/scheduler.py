@@ -65,13 +65,14 @@ import numpy as np
 
 from ..models import ModelConfig
 from ..models.model import (
+    UnsupportedPatternError,
     init_decode_cache,
     packed_prefill,
     prefill_chunk,
     require_chunkable,
 )
 from . import packing
-from .kv import KVCache, KVCacheSpec
+from .kv import KVCache, KVCacheSpec, reset_recurrent_state
 from .sampling import SamplingParams, sample_tokens
 from .spec import Proposer, SpecConfig, accept_sampled
 
@@ -87,17 +88,28 @@ class UnsupportedDistError(NotImplementedError):
     ``NotImplementedError`` so pre-existing handlers keep working."""
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _engine_step(params, cfg: ModelConfig, cache, tokens, pos, lens):
+@functools.partial(jax.jit, static_argnames=("cfg", "moe_impl"))
+def _engine_step(params, cfg: ModelConfig, cache, tokens, pos, lens,
+                 moe_impl: str = "dense"):
     """Module-level jitted step: compilations are shared across engines
-    with the same (cfg, shapes) — engine construction stays cheap."""
-    return prefill_chunk(params, cfg, cache, tokens, pos, lens, moe_impl="dense")
+    with the same (cfg, shapes) — engine construction stays cheap.
+    Returns ``(logits, cache, aux)``; ``aux["expert_overflow"]`` counts
+    tokens the capacity-factor MoE router dropped this step (zero for
+    dense dispatch and for MoE-free configs)."""
+    return prefill_chunk(
+        params, cfg, cache, tokens, pos, lens,
+        moe_impl=moe_impl, return_aux=True,
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _packed_engine_step(params, cfg: ModelConfig, cache, tokens, slot_ids, pos):
+@functools.partial(jax.jit, static_argnames=("cfg", "moe_impl"))
+def _packed_engine_step(params, cfg: ModelConfig, cache, tokens, slot_ids, pos,
+                        moe_impl: str = "dense"):
     """Token-packed step: one (capacity,) program per engine config."""
-    return packed_prefill(params, cfg, cache, tokens, slot_ids, pos, moe_impl="dense")
+    return packed_prefill(
+        params, cfg, cache, tokens, slot_ids, pos,
+        moe_impl=moe_impl, return_aux=True,
+    )
 
 
 class AdmissionError(RuntimeError):
@@ -208,6 +220,14 @@ class StepStats:
     #: that overshoot explicit instead of letting BENCH records present
     #: tau as absolute.  Always 0 with no budget.
     budget_overshoot: int = 0
+    #: routed (token, expert) assignments dropped to the residual path
+    #: by the capacity-factor MoE dispatch this step — the per-expert
+    #: mirror of ``budget_overshoot``: capacity is a static per-expert
+    #: tau, and this is the work it deferred (here, *dropped*: MoE
+    #: layers have a residual, so a dropped token still flows — it just
+    #: skips the expert FFN).  Always 0 for dense dispatch and
+    #: MoE-free configs.
+    expert_overflow: int = 0
 
     @property
     def scheduled_tokens(self) -> int:
@@ -283,6 +303,26 @@ class ContinuousBatcher:
         (slots over the data axes, KV heads over "model") and the params
         by the path-based rules; the jitted engine step then partitions
         from the committed input shardings.  None = local placement.
+      capacity_factor: MoE serving dispatch — when set (requires
+        ``cfg.n_experts > 0``), expert FFNs run over fixed per-expert
+        buffers of ``ceil(cf * tokens * top_k / n_experts)`` slots
+        (``models.moe.apply_moe_capacity``) instead of the dense
+        every-token-through-every-expert matmul.  Tokens past an
+        expert's capacity are *dropped to the residual path* — the
+        per-expert analogue of the token-budget ``tau``: a static
+        compute bound enforced by deferrable-work dropping, reported
+        per step as ``StepStats.expert_overflow`` (the per-expert
+        mirror of ``budget_overshoot``).  ``float('inf')`` never drops
+        and is byte-identical to dense dispatch; ``None`` (default)
+        keeps the dense path.
+
+    Recurrent patterns ('R'/'M' layers) serve through the same engine
+    with two carve-outs, both rooted in the carried state being an
+    in-place value rather than an append-only log: speculative decoding
+    is refused at construction (rejected drafts cannot roll back state
+    the scan already consumed), and paged prefix sharing is disabled
+    (skipping shared prompt tokens would skip their recurrent-state
+    updates — attention pages can be mapped, recurrent state cannot).
     """
 
     def __init__(
@@ -301,6 +341,7 @@ class ContinuousBatcher:
         kv_dtype: Optional[str] = None,
         spec: "Optional[SpecConfig | Proposer]" = None,
         dist=None,
+        capacity_factor: Optional[float] = None,
     ):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
@@ -313,6 +354,32 @@ class ContinuousBatcher:
             spec.proposer.bind_engine(batch_slots, max_len)
         # fail at construction, not on the first step mid-trace
         require_chunkable(cfg, "ContinuousBatcher")
+        self.recurrent = bool(set(cfg.pattern) & {"R", "M"})
+        if self.recurrent and spec is not None:
+            # raised here, not on the first rejected draft: trim_slot
+            # would refuse mid-serve, stranding every in-flight request
+            raise UnsupportedPatternError(
+                "speculative decoding needs KV rollback of rejected "
+                "drafts; recurrent state ('R'/'M' layers) has already "
+                "consumed them and cannot roll back (see "
+                "KVCache.trim_slot)"
+            )
+        if capacity_factor is not None:
+            if cfg.n_experts <= 0:
+                raise ValueError(
+                    "capacity_factor is an MoE dispatch knob but the "
+                    f"config has n_experts={cfg.n_experts}"
+                )
+            if capacity_factor <= 0:
+                raise ValueError(
+                    f"capacity_factor must be > 0, got {capacity_factor}"
+                )
+            # cfg is the jitted step's static arg: bake the factor in so
+            # the compiled program's expert buffers are sized once
+            cfg = dataclasses.replace(
+                cfg, capacity_factor=float(capacity_factor)
+            )
+        self.moe_impl = "capacity" if capacity_factor is not None else "dense"
         if isinstance(cache, KVCacheSpec):
             kv_spec = cache
             # raised, not assert-ed: under python -O a mismatched spec
@@ -387,6 +454,7 @@ class ContinuousBatcher:
         self.steps = 0
         self.step_stats: List[StepStats] = []
         self._shared_step = 0
+        self._overflow_step = 0
         self._step_callbacks: List = []
 
     # ------------------------------------------------------------------
@@ -504,6 +572,11 @@ class ContinuousBatcher:
         leader will ever publish for this prompt — or the leader stops
         prefilling.
         """
+        if self.recurrent:
+            # prefix sharing is disabled for 'R'/'M' patterns (shared
+            # tokens would skip recurrent-state updates), so no pages
+            # will ever be published — parking would wait on nothing
+            return False
         ps = self.kv.page_size
         limit = (len(head.prompt) - 1) // ps  # head's shareable-block cap
         if limit == 0:
@@ -540,6 +613,14 @@ class ContinuousBatcher:
                         break
                 else:
                     shared = 0
+                    if self.recurrent:
+                        # dense layout bypasses KVCache.admit_slot: zero
+                        # the recycled slot's recurrent rows here.  KV
+                        # rows are position-masked and need no scrub,
+                        # but carried state is read unmasked every step
+                        # — a previous tenant's h/conv/state would seed
+                        # the new request.
+                        self.cache = reset_recurrent_state(self.cache, [i])
                 s.req = self.queue.pop(0)
                 # prompt tokens covered by shared prefix pages are already
                 # in the cache — skip straight past them
@@ -691,9 +772,9 @@ class ContinuousBatcher:
             topk[i] = sp.top_k
             topp[i] = sp.top_p
             oidx[i, :n] = np.maximum(out_base[i] + np.arange(n), 0)
-        logits, self.cache = _engine_step(
+        logits, self.cache, aux = _engine_step(
             self.params, self.cfg, self.cache, jnp.asarray(tokens),
-            jnp.asarray(pos), jnp.asarray(lens),
+            jnp.asarray(pos), jnp.asarray(lens), moe_impl=self.moe_impl,
         )
         # Synchronize every step (np.asarray blocks on the result; the
         # jitted sampler dispatches asynchronously in the same chain, so
@@ -704,6 +785,7 @@ class ContinuousBatcher:
         next_tok = np.asarray(sample_tokens(
             logits, seeds, oidx, temps, topk, topp
         ))  # (B, C)
+        self._overflow_step = int(np.asarray(aux["expert_overflow"]))
         return {i: next_tok[i, : len(toks)] for i, _, toks in grants}
 
     def _run_packed(self, grants, out_base) -> Dict[int, np.ndarray]:
@@ -730,13 +812,15 @@ class ContinuousBatcher:
             temps[j : j + m] = sp.temperature
             topk[j : j + m] = sp.top_k
             topp[j : j + m] = sp.top_p
-        logits, self.cache = _packed_engine_step(
+        logits, self.cache, aux = _packed_engine_step(
             self.params, self.cfg, self.cache, jnp.asarray(layout.tokens),
             jnp.asarray(layout.slot_ids), jnp.asarray(layout.positions),
+            moe_impl=self.moe_impl,
         )
         next_tok = np.asarray(sample_tokens(
             logits, seeds, layout.out_idx, temps, topk, topp
         ))  # (P,) — syncs
+        self._overflow_step = int(np.asarray(aux["expert_overflow"]))
         return {i: next_tok[j : j + m] for i, (j, m) in layout.spans.items()}
 
     def step(self):
@@ -744,6 +828,7 @@ class ContinuousBatcher:
         t0 = time.perf_counter()
         queued0 = len(self.queue)  # queue depth before this step's admission
         self._shared_step = 0
+        self._overflow_step = 0  # set by the step runner from the jit aux
         self._admit()
         if self.kv is not None:
             # lazy prefix sharing: an older request may have finished
@@ -870,6 +955,7 @@ class ContinuousBatcher:
                 max(scheduled - self.token_budget, 0)
                 if self.token_budget is not None else 0
             ),
+            expert_overflow=self._overflow_step,
         )
         self.step_stats.append(stats)
         self.steps += 1
@@ -902,6 +988,7 @@ class ContinuousBatcher:
         self.finished = {}
         self.cancelled = {}
         self._shared_step = 0  # stale counter from the last step otherwise
+        self._overflow_step = 0
         if self.kv is not None:
             self.kv.reset_accounting()
 
@@ -976,6 +1063,15 @@ class ContinuousBatcher:
             ),
             "max_budget_overshoot": float(
                 max((s.budget_overshoot for s in st), default=0)
+            ),
+            # capacity-factor MoE dispatch: (token, expert) routes the
+            # per-expert capacity dropped to the residual path — the
+            # per-expert analogue of the deferral accounting above
+            "expert_overflow_tokens": float(
+                sum(s.expert_overflow for s in st)
+            ),
+            "max_expert_overflow": float(
+                max((s.expert_overflow for s in st), default=0)
             ),
             "mean_queued_requests": float(
                 np.mean([s.queued_requests for s in st]) if st else 0.0

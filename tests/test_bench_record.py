@@ -27,7 +27,8 @@ class TestBenchRecord:
     def test_all_modes_present(self, record):
         modes = {r["mode"] for r in record["rows"]}
         assert modes == {"dense", "packed", "paged", "paged-int8", "spec",
-                         "sampled-dense", "sampled", "spec-sampled"}, modes
+                         "sampled-dense", "sampled", "spec-sampled",
+                         "moe-packed", "recurrent-chunked"}, modes
 
     def test_rows_carry_steps_per_token(self, record):
         for r in record["rows"]:
@@ -57,7 +58,21 @@ class TestBenchRecord:
         greedy_modes = {r["mode"] for r in record["rows"]
                         if "sampling" not in r}
         assert greedy_modes == {"dense", "packed", "paged", "paged-int8",
-                                "spec"}
+                                "spec", "moe-packed", "recurrent-chunked"}
+
+    def test_model_zoo_rows(self, record):
+        """The one-engine-every-architecture rows: the recurrent row
+        pins chunk-scan == decode-oracle parity; the MoE row pins the
+        cf=inf dense-parity flag and carries the dropped-route count
+        (per-expert tau accounting) at the recorded capacity factor."""
+        by_mode = {r["mode"]: r for r in record["rows"]}
+        rec = by_mode["recurrent-chunked"]
+        assert rec["decode_oracle_match"] is True
+        assert set(rec["pattern"]) <= {"R", "M"}  # actually recurrent
+        moe = by_mode["moe-packed"]
+        assert moe["cf_inf_matches_dense"] is True
+        assert moe["capacity_factor"] > 0
+        assert moe["expert_overflow_tokens"] >= 0
 
     def test_speculative_record_clears_bar(self, record):
         """The acceptance criterion: >= 1.5x fewer engine steps per

@@ -108,13 +108,15 @@ class TestPrefillChunkModel:
             np.testing.assert_allclose(last[i], r, atol=1e-5)
             assert int(last[i].argmax()) == int(r.argmax())
 
-    def test_recurrent_patterns_rejected(self, params):
+    def test_encdec_rejected(self, params):
         # typed error (not a bare assert — those vanish under python -O);
-        # the R/M/enc-dec matrix lives in test_serve_packed.py
+        # 'R'/'M' patterns chunk-scan through this path now, but enc-dec
+        # models remain decode_step-only (the non-chunkable matrix lives
+        # in test_serve_packed.py)
         bad = ModelConfig(name="r", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
-                          d_ff=64, vocab_size=101, layer_pattern="RG",
-                          dtype="float32", remat=False)
-        with pytest.raises(NotImplementedError, match="attention-only"):
+                          d_ff=64, vocab_size=101, layer_pattern="G",
+                          dtype="float32", remat=False, enc_layers=2)
+        with pytest.raises(NotImplementedError, match="enc-dec"):
             prefill_chunk({}, bad, {}, jnp.zeros((1, 4), jnp.int32),
                           jnp.zeros((1,), jnp.int32), jnp.ones((1,), jnp.int32))
 

@@ -1,0 +1,269 @@
+"""Model-zoo serving: recurrent chunk-scan + MoE capacity-dispatch parity.
+
+The generalized cache/step contract (``serve.kv.KVState``'s per-layer-kind
+LayerState protocol) promises that 'R'/'M' recurrent patterns and MoE
+configs serve through the *same* engine as attention, token-identically to
+the single-token ``decode_step`` oracle.  This suite is that promise:
+
+* engine outputs vs the decode oracle for ``mamba2_tiny`` / ``hybrid_tiny``
+  across budgets {None, 4, 16} x {dense, packed} x {dense, paged} cache —
+  with slot reuse (more requests than slots);
+* recurrent-state lifecycle invariants: admission zeroes, fork copies,
+  trim refuses, cancel + readmit does not leak state;
+* MoE capacity-factor dispatch properties: cf=inf is *byte-identical* to
+  dense dispatch, per-expert counts never exceed capacity, padding
+  consumes no capacity, and the engine surfaces dropped routes as
+  ``StepStats.expert_overflow``.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models import moe as MoE
+from repro.serve import ContinuousBatcher, Request, UnsupportedPatternError
+from repro.serve.kv import KVCacheSpec
+
+MAX_LEN = 32
+MAX_NEW = 4
+
+
+def _params(name):
+    cfg = get_config(name)
+    return cfg, M.init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    return {n: _params(n) for n in ("mamba2_tiny", "hybrid_tiny", "moe_tiny")}
+
+
+def _prompts(cfg, n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=k).tolist()
+            for k in rng.integers(3, 12, size=n)]
+
+
+def decode_oracle(params, cfg, prompt, max_new=MAX_NEW, max_len=MAX_LEN):
+    """One request alone, token by token — the parity ground truth."""
+    cache = M.init_decode_cache(params, cfg, 1, max_len, linear=True)
+    cur, out = list(prompt), []
+    for t in range(len(prompt) + max_new - 1):
+        lg, cache = M.decode_step(
+            params, cfg, cache, jnp.asarray([[cur[t]]], jnp.int32),
+            jnp.asarray([t], jnp.int32))
+        jax.block_until_ready(lg)
+        if t >= len(prompt) - 1:
+            nxt = int(np.argmax(np.asarray(lg)[0, 0]))
+            cur.append(nxt)
+            out.append(nxt)
+    return out
+
+
+@pytest.fixture(scope="module")
+def oracle(zoo):
+    refs = {}
+    for name, (cfg, params) in zoo.items():
+        refs[name] = {
+            tuple(p): decode_oracle(params, cfg, p) for p in _prompts(cfg)
+        }
+    return refs
+
+
+def run_engine(params, cfg, prompts, max_new=MAX_NEW, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("chunk_size", 4)
+    eng = ContinuousBatcher(params, cfg, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=max_new))
+    done = eng.run()
+    return eng, {u: r.output for u, r in done.items()}
+
+
+class TestRecurrentEngineParity:
+    """Engine == decode oracle for recurrent patterns, every step path."""
+
+    @pytest.mark.parametrize("arch", ["mamba2_tiny", "hybrid_tiny"])
+    @pytest.mark.parametrize("budget", [None, 4, 16])
+    @pytest.mark.parametrize("packed", [False, True])
+    def test_budget_matrix(self, zoo, oracle, arch, budget, packed):
+        cfg, params = zoo[arch]
+        prompts = _prompts(cfg)  # 5 prompts through 2 slots: slot reuse
+        _, got = run_engine(params, cfg, prompts,
+                            token_budget=budget, packed=packed)
+        for i, p in enumerate(prompts):
+            assert got[i] == oracle[arch][tuple(p)], (arch, budget, packed, i)
+
+    @pytest.mark.parametrize("arch", ["mamba2_tiny", "hybrid_tiny"])
+    def test_paged_cache(self, zoo, oracle, arch):
+        cfg, params = zoo[arch]
+        prompts = _prompts(cfg)
+        _, got = run_engine(params, cfg, prompts, cache="paged", page_size=4)
+        for i, p in enumerate(prompts):
+            assert got[i] == oracle[arch][tuple(p)], (arch, i)
+
+
+class TestRecurrentLifecycle:
+    """Slot-indexed recurrent leaves: admit zeroes, fork copies, trim
+    refuses, cancel does not leak state into the next tenant."""
+
+    def _recurrent_leaves(self, data):
+        from repro.serve.kv import _is_recurrent_path
+
+        flat = jax.tree_util.tree_flatten_with_path(data)[0]
+        return [(p, x) for p, x in flat if _is_recurrent_path(p)]
+
+    def _poison(self, kv, slot, value):
+        """Write ``value`` into every recurrent row of ``slot``."""
+        import dataclasses as dc
+
+        from repro.serve.kv import _is_recurrent_path, _path_has
+
+        def leaf(path, x):
+            if not _is_recurrent_path(path):
+                return x
+            if _path_has(path, ("groups",)):
+                return x.at[:, slot].set(value)
+            return x.at[slot].set(value)
+
+        kv.state = dc.replace(
+            kv.state,
+            data=jax.tree_util.tree_map_with_path(leaf, kv.state.data))
+
+    def test_admit_zeroes_fork_copies_trim_refuses(self, zoo):
+        cfg, params = zoo["hybrid_tiny"]
+        spec = KVCacheSpec(num_slots=2, max_len=MAX_LEN, layout="paged",
+                           page_size=4)
+        kv = spec.build(params, cfg)
+        leaves = self._recurrent_leaves(kv.state.data)
+        assert leaves, "hybrid pattern must carry recurrent leaves"
+
+        self._poison(kv, 0, 7.0)
+        assert kv.admit_slot(0, [1, 2, 3], 4) == 0  # nothing shareable
+        for path, x in self._recurrent_leaves(kv.state.data):
+            assert not np.asarray(x).any(), path  # admission zeroed slot 0
+
+        self._poison(kv, 0, 3.0)
+        kv.fork_slot(0, 1)
+        for path, x in self._recurrent_leaves(kv.state.data):
+            a = np.asarray(x)
+            row0 = a[:, 0] if "groups" in str(path) else a[0]
+            row1 = a[:, 1] if "groups" in str(path) else a[1]
+            np.testing.assert_array_equal(row0, row1)  # eager copy, no COW
+
+        with pytest.raises(UnsupportedPatternError, match="roll back"):
+            kv.trim_slot(0, 2)
+
+    def test_prefix_sharing_disabled(self, zoo):
+        cfg, params = zoo["hybrid_tiny"]
+        spec = KVCacheSpec(num_slots=2, max_len=MAX_LEN, layout="paged",
+                           page_size=2)
+        kv = spec.build(params, cfg)
+        prompt = list(range(10))
+        kv.admit_slot(0, prompt, 4)
+        # fully-written prompt pages would normally publish for sharing
+        kv.register_prompt_pages(0, prompt, len(prompt))
+        assert kv.probe_shared(prompt) == 0
+        assert kv.admit_slot(1, prompt, 4) == 0  # nothing got shared
+
+    def test_cancel_then_readmit_matches_oracle(self, zoo, oracle):
+        cfg, params = zoo["mamba2_tiny"]
+        prompts = _prompts(cfg)
+        eng = ContinuousBatcher(params, cfg, batch_slots=2, max_len=MAX_LEN,
+                                chunk_size=4)
+        # run a victim a few steps, cancel it mid-flight, then serve the
+        # real workload through the (recycled) slots
+        eng.submit(Request(uid=99, prompt=prompts[0], max_new_tokens=8))
+        eng.step()
+        eng.step()
+        assert eng.cancel(99)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=MAX_NEW))
+        done = eng.run()
+        for i, p in enumerate(prompts):
+            assert done[i].output == oracle["mamba2_tiny"][tuple(p)], i
+
+
+class TestMoECapacityDispatch:
+    """Property tests for ``models.moe.apply_moe_capacity``."""
+
+    @pytest.fixture(scope="class")
+    def moe(self, zoo):
+        cfg, _ = zoo["moe_tiny"]
+        p = MoE.init_moe(jax.random.PRNGKey(3), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, cfg.d_model))
+        return cfg, p, x
+
+    def test_cf_inf_byte_identical_to_dense(self, moe):
+        import dataclasses as dc
+
+        cfg, p, x = moe
+        cfg_inf = dc.replace(cfg, capacity_factor=math.inf)
+        yd, _ = MoE.apply_moe_dense(p, x, cfg)
+        yc, _, ovf = MoE.apply_moe_capacity(p, x, cfg_inf)
+        assert int(ovf) == 0
+        np.testing.assert_array_equal(np.asarray(yd), np.asarray(yc))
+
+    def test_counts_never_exceed_capacity(self, moe):
+        import dataclasses as dc
+
+        cfg, p, x = moe
+        t = x.shape[0] * x.shape[1]
+        for cf in (0.25, 0.5, 1.0):
+            cfg_c = dc.replace(cfg, capacity_factor=cf)
+            cap = min(max(math.ceil(t * cfg.top_k / cfg.n_experts * cf), 1), t)
+            _, top_i, _ = MoE._router(p, x.reshape(t, -1), cfg)
+            counts = np.bincount(np.asarray(top_i).ravel(),
+                                 minlength=cfg.n_experts)
+            expect_drop = int(np.maximum(counts - cap, 0).sum())
+            _, _, ovf = MoE.apply_moe_capacity(p, x, cfg_c)
+            # overflow is exactly the per-expert excess over capacity
+            assert int(ovf) == expect_drop, (cf, cap, counts)
+
+    def test_padding_consumes_no_capacity(self, moe):
+        import dataclasses as dc
+
+        cfg, p, x = moe
+        b, s, d = x.shape
+        cfg_c = dc.replace(cfg, capacity_factor=0.5)
+        # mask the tail half of every row; a padded call must equal the
+        # same dispatch over only the valid tokens (capacity is computed
+        # over the static shape, so equalize t by padding the short one)
+        valid = jnp.arange(s)[None, :] < jnp.asarray([s // 2, s // 2])[:, None]
+        y_pad, _, ovf_pad = MoE.apply_moe_capacity(p, x, cfg_c, valid=valid)
+        y_np = np.asarray(y_pad)
+        # invalid rows contribute exactly nothing
+        assert not y_np[:, s // 2:].any()
+        x_trim = jnp.concatenate(
+            [x[:, : s // 2], jnp.zeros_like(x[:, s // 2:])], axis=1)
+        y_trim, _, ovf_trim = MoE.apply_moe_capacity(
+            p, x_trim, cfg_c, valid=valid)
+        np.testing.assert_array_equal(y_np[:, : s // 2],
+                                      np.asarray(y_trim)[:, : s // 2])
+        assert int(ovf_pad) == int(ovf_trim)
+
+    def test_engine_cf_inf_matches_oracle_and_counts_overflow(
+            self, zoo, oracle):
+        cfg, params = zoo["moe_tiny"]
+        prompts = _prompts(cfg)
+        for packed in (False, True):
+            _, got = run_engine(params, cfg, prompts,
+                                capacity_factor=math.inf, packed=packed)
+            for i, p in enumerate(prompts):
+                assert got[i] == oracle["moe_tiny"][tuple(p)], (packed, i)
+        eng, _ = run_engine(params, cfg, prompts, capacity_factor=0.25)
+        s = eng.stats_summary()
+        assert s["expert_overflow_tokens"] > 0
+        assert s["expert_overflow_tokens"] == sum(
+            st.expert_overflow for st in eng.step_stats)
+
+    def test_capacity_factor_requires_experts(self, zoo):
+        cfg, params = zoo["mamba2_tiny"]
+        with pytest.raises(ValueError, match="n_experts"):
+            ContinuousBatcher(params, cfg, batch_slots=1, max_len=8,
+                              capacity_factor=1.0)

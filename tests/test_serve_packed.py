@@ -177,24 +177,30 @@ class TestPackedModelPath:
 
 
 class TestUnsupportedPatternTyped:
-    """'M'/'R' configs raise the typed error cleanly (asserts would
-    vanish under python -O)."""
+    """Non-chunkable configs raise the typed error cleanly (asserts would
+    vanish under python -O).  'R'/'M' patterns chunk-scan through the
+    serving paths now; what remains unservable is bidirectional 'B'
+    layers (no causal cache) and, for recurrent patterns, speculative
+    decoding (carried state cannot roll back rejected drafts)."""
 
     @pytest.mark.parametrize("pattern", ["R", "M"])
-    def test_engine_construction_raises(self, pattern):
+    def test_spec_with_recurrent_raises(self, pattern):
+        from repro.serve.spec import NGramProposer, SpecConfig
+
         bad = ModelConfig(name="bad", n_layers=2, d_model=32, n_heads=2,
                           n_kv_heads=1, d_ff=64, vocab_size=101,
                           layer_pattern=pattern, dtype="float32", remat=False)
-        with pytest.raises(UnsupportedPatternError, match="attention-only"):
-            ContinuousBatcher({}, bad, batch_slots=1, max_len=8)
+        with pytest.raises(UnsupportedPatternError, match="roll back"):
+            ContinuousBatcher({}, bad, batch_slots=1, max_len=8,
+                              spec=SpecConfig(proposer=NGramProposer()))
 
     @pytest.mark.parametrize("fn", [prefill_chunk, packed_prefill])
-    @pytest.mark.parametrize("pattern", ["RG", "MG"])
+    @pytest.mark.parametrize("pattern", ["BG", "B"])
     def test_model_paths_raise(self, fn, pattern):
         bad = ModelConfig(name="bad", n_layers=2, d_model=32, n_heads=2,
                           n_kv_heads=1, d_ff=64, vocab_size=101,
                           layer_pattern=pattern, dtype="float32", remat=False)
-        with pytest.raises(UnsupportedPatternError, match="attention-only"):
+        with pytest.raises(UnsupportedPatternError, match="layer patterns"):
             fn({}, bad, {}, jnp.zeros((4,) if fn is packed_prefill else (1, 4), jnp.int32),
                jnp.zeros((1,), jnp.int32), jnp.ones((1,), jnp.int32))
 
